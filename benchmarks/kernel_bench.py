@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks: wall time of the pure-jnp oracle at model-like
+shapes (CPU wall time is NOT a TPU projection — the TPU-side statement is
+the roofline bytes/FLOPs, computed here analytically per kernel) and an
+interpret-mode allclose gate."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_kernel import rwkv6_chunked
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_flash(B=1, H=8, KvE=8, S=1024, dh=128):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KvE, S, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KvE, S, dh), jnp.float32)
+    us = _time(lambda *a: ref.flash_attention_ref(*a), q, k, v)
+    out = flash_attention(q, k, v, bq=256, bk=256, interpret=True)
+    err = float(jnp.abs(out - ref.flash_attention_ref(q, k, v)).max())
+    flops = 4 * B * H * S * S * dh / 2  # causal
+    tpu_us = flops / PEAK_FLOPS_BF16 * 1e6
+    return us, f"allclose_err={err:.1e};tpu_roofline_us={tpu_us:.1f}"
+
+
+def bench_decode(B=8, H=8, KvE=8, T=8192, dh=128):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KvE, T, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KvE, T, dh), jnp.float32)
+    lens = jnp.full((B,), T, jnp.int32)
+    us = _time(lambda *a: ref.decode_attention_ref(*a), q, k, v, lens)
+    sm = decode_attention(q[:2, :, :], k[:2, :, :256], v[:2, :, :256],
+                          lens[:2] * 0 + 256, bk=128, interpret=True)
+    err = float(jnp.abs(sm - ref.decode_attention_ref(
+        q[:2], k[:2, :, :256], v[:2, :, :256], lens[:2] * 0 + 256)).max())
+    hbm_bytes = 2 * B * KvE * T * dh * 2  # K+V read, bf16 on TPU
+    tpu_us = hbm_bytes / HBM_BW * 1e6
+    return us, f"allclose_err={err:.1e};tpu_membound_us={tpu_us:.1f}"
+
+
+def bench_rwkv6(B=1, H=8, S=512, dh=64):
+    ks = jax.random.split(KEY, 5)
+    mk = lambda i: 0.3 * jax.random.normal(ks[i], (B, H, S, dh))
+    r, k, v = mk(0), mk(1), mk(2)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, H, S, dh))) * 0.4 + 0.55
+    u = 0.1 * jax.random.normal(ks[4], (H, dh))
+    s0 = jnp.zeros((B, H, dh, dh))
+    us = _time(lambda *a: ref.rwkv6_ref(*a)[0], r, k, v, w, u, s0)
+    y, _ = rwkv6_chunked(r[:, :, :64], k[:, :, :64], v[:, :, :64],
+                         w[:, :, :64], u, s0, chunk=32, interpret=True)
+    yr, _ = ref.rwkv6_ref(r[:, :, :64], k[:, :, :64], v[:, :, :64],
+                          w[:, :, :64], u, s0)
+    err = float(jnp.abs(y - yr).max())
+    hbm = 4 * B * H * S * dh * 2 + B * H * S * dh * 4
+    tpu_us = hbm / HBM_BW * 1e6
+    return us, f"allclose_err={err:.1e};tpu_membound_us={tpu_us:.1f}"
+
+
+def rows():
+    us, d = bench_flash()
+    yield ("kernel/flash_attention_ref", us, d)
+    us, d = bench_decode()
+    yield ("kernel/decode_attention_ref", us, d)
+    us, d = bench_rwkv6()
+    yield ("kernel/rwkv6_ref", us, d)
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(map(str, r)))

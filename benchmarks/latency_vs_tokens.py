@@ -1,0 +1,53 @@
+"""Fig. 3 — inference latency vs generated-token step on 25 devices,
+resource-aware vs EdgeShard vs Galaxy (plus static ablation), in the
+paper's 2-8 GB regime and the tight-memory overload regime."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.paper_setup import (medium_net, paper_blocks, paper_cost,
+                                    policy_kwargs)
+from repro.core import ALL_POLICIES, simulate
+
+POLICIES = ("resource-aware", "lookahead", "edgeshard", "galaxy", "static")
+N_TOKENS = 1000   # the paper's horizon
+
+
+def run(tight: bool, n_tokens: int = N_TOKENS, seed: int = 11):
+    blocks = paper_blocks()
+    cost = paper_cost()
+    net = medium_net(tight=tight)
+    out = {}
+    for name in POLICIES:
+        kw = dict(policy_kwargs(name))
+        if name == "lookahead":
+            kw["deadline"] = 0.2
+        pol = ALL_POLICIES[name](blocks, cost, **kw)
+        t0 = time.time()
+        res = simulate(pol, blocks, cost, net, n_tokens, seed=seed)
+        out[name] = dict(total=res.total_latency,
+                         per_step_last=float(res.per_step_latency[-1]),
+                         migrations=res.migrations,
+                         series=res.per_step_latency,
+                         cumulative=[s.cumulative for s in res.steps],
+                         wall=time.time() - t0)
+    return out
+
+
+def rows():
+    for tight in (False, True):
+        regime = "tight" if tight else "paper"
+        out = run(tight)
+        ra = out["resource-aware"]["total"]
+        for name, d in out.items():
+            speedup = d["total"] / ra
+            yield (f"fig3/{regime}/{name}", d["wall"] * 1e6,
+                   f"total_s={d['total']:.1f};xRA={speedup:.2f};"
+                   f"migr={d['migrations']}")
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(map(str, r)))

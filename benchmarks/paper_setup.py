@@ -1,0 +1,35 @@
+"""Shared configuration for the paper-reproduction benchmarks (§V.B).
+
+Large LLM setup: h=32, D=2048, L0=64, GPT-2/LLaMA scale via the 32-layer
+column lift (EXPERIMENTS.md §Reproduction notes), incremental decode
+compute, λ=1 (the paper's worst-case migration stress).
+"""
+from repro.core.blocks import CostModel, make_blocks
+from repro.core.network import DeviceNetwork, GB
+
+H = 32
+D = 2048
+L0 = 64
+N_LAYERS = 32
+DEADLINE = 0.2
+
+
+def paper_cost(**over):
+    kw = dict(d_model=D, n_heads=H, L0=L0, n_layers=N_LAYERS,
+              compute_mode="incremental")
+    kw.update(over)
+    return CostModel(**kw)
+
+
+def paper_blocks():
+    return make_blocks(H)
+
+
+def medium_net(seed=7, tight=False):
+    mem = (1 * GB, 3 * GB) if tight else (2 * GB, 8 * GB)
+    return DeviceNetwork.sample(25, seed=seed, mem_range=mem)
+
+
+def policy_kwargs(name):
+    return dict(deadline=DEADLINE) if name in ("resource-aware", "static") \
+        else {}

@@ -1,0 +1,44 @@
+"""Benchmark driver — one module per paper table/figure (+ roofline and
+kernel micro-benches). Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only small_scale,fig3,...]
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("small_scale", "benchmarks.small_scale"),          # §V.C table
+    ("fig3", "benchmarks.latency_vs_tokens"),           # Fig. 3
+    ("fig4", "benchmarks.memory_vs_tokens"),            # Fig. 4
+    ("scalability", "benchmarks.scalability"),          # §V.D(c)
+    ("kernels", "benchmarks.kernel_bench"),             # per-kernel
+    ("roofline", "benchmarks.roofline"),                # deliverable (g)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark groups")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["rows"])
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001 — report, keep benching
+            failed.append((key, e))
+            print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

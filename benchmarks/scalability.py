@@ -1,0 +1,43 @@
+"""§V.D(c) — scalability with increasing device count: latency and
+controller wall-time as the network grows (coordination overhead)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.paper_setup import paper_blocks, paper_cost, policy_kwargs
+from repro.core import ALL_POLICIES, DeviceNetwork, simulate
+from repro.core.network import GB
+
+DEVICE_COUNTS = (5, 10, 25, 40)
+N_TOKENS = 200
+
+
+def run(seed: int = 7):
+    blocks = paper_blocks()
+    cost = paper_cost()
+    out = {}
+    for nd in DEVICE_COUNTS:
+        net = DeviceNetwork.sample(nd, seed=seed,
+                                   mem_range=(2 * GB, 8 * GB))
+        pol = ALL_POLICIES["resource-aware"](blocks, cost,
+                                             **policy_kwargs("resource-aware"))
+        t0 = time.time()
+        res = simulate(pol, blocks, cost, net, N_TOKENS, seed=11)
+        out[nd] = dict(total=res.total_latency,
+                       controller_ms=(time.time() - t0) / N_TOKENS * 1e3,
+                       migrations=res.migrations)
+    return out
+
+
+def rows():
+    out = run()
+    for nd, d in out.items():
+        yield (f"scalability/devices={nd}", d["controller_ms"] * 1e3,
+               f"total_s={d['total']:.1f};migr={d['migrations']}")
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(map(str, r)))

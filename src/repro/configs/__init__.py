@@ -1,0 +1,37 @@
+"""Architecture registry — import every config module so @register runs."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    cell_is_runnable,
+    get_config,
+    list_archs,
+)
+
+# Register all assigned architectures (+ the paper's own model).
+from repro.configs import (  # noqa: F401
+    glm4_9b,
+    llama3_2_vision_11b,
+    llama3_8b,
+    mixtral_8x22b,
+    mixtral_8x7b,
+    musicgen_large,
+    paper_gpt,
+    qwen1_5_110b,
+    qwen1_5_32b,
+    rwkv6_7b,
+    zamba2_2_7b,
+)
+
+ASSIGNED_ARCHS = (
+    "qwen1.5-32b",
+    "qwen1.5-110b",
+    "llama3-8b",
+    "glm4-9b",
+    "llama-3.2-vision-11b",
+    "rwkv6-7b",
+    "mixtral-8x22b",
+    "mixtral-8x7b",
+    "musicgen-large",
+    "zamba2-2.7b",
+)

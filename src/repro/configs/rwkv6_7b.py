@@ -1,0 +1,26 @@
+"""rwkv6-7b [ssm] — Finch: 32L d_model=4096 attention-free d_ff=14336 vocab=65536.
+
+Data-dependent decay; O(1) decode state (no K/V cache). The paper's
+head+KV-cache partitioning unit does not exist here — see DESIGN.md §5
+(arch-applicability): blocks become channel-head shards of the WKV state.
+
+[arXiv:2404.05892; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("rwkv6-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b",
+        family="ssm",
+        n_layers=32,
+        d_model=4096,
+        n_heads=64,          # wkv heads = d_model / head_dim(64)
+        n_kv_heads=0,        # attention-free
+        d_head=64,
+        d_ff=14336,
+        vocab_size=65536,
+        norm_type="layernorm",
+        ssm_head_dim=64,
+    )

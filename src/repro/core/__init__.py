@@ -1,0 +1,26 @@
+"""The paper's contribution: attention-head-level partitioning + myopic
+resource-aware migration for low-latency edge LLM inference."""
+from repro.core.algorithm import AlgoStats, ResourceAwareAssigner  # noqa: F401
+from repro.core.baselines import (  # noqa: F401
+    ALL_POLICIES,
+    DynamicLayerPolicy,
+    EdgeShardPolicy,
+    GalaxyPolicy,
+    GreedyPolicy,
+    Policy,
+    ResourceAwarePolicy,
+    RoundRobinPolicy,
+    StaticPolicy,
+)
+from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ, make_blocks  # noqa: F401
+from repro.core.delay import (  # noqa: F401
+    inference_delay,
+    memory_feasible,
+    memory_usage,
+    migration_delay,
+    total_delay,
+)
+from repro.core.network import DeviceNetwork, GB, GBPS, GFLOPS  # noqa: F401
+from repro.core.scoring import comm_factor, score, score_matrix  # noqa: F401
+from repro.core.simulator import SimResult, compare_policies, simulate  # noqa: F401
+from repro.core.solver import exact_horizon, exact_myopic  # noqa: F401

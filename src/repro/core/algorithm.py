@@ -1,0 +1,290 @@
+"""Algorithm 1 — Resource-Aware LLM block assignment at interval τ (paper §IV).
+
+Faithful to the pseudocode:
+  1-3  reset counters, start T_max timer, gather {M_j, C_j, R_jk}
+  4    sort blocks by descending demand (memory; compute tie-break)
+  5-22 per block: score all devices, take argmin; tentative assign; if the
+       device's *aggregate* memory/compute over-runs, undo and call
+       ResolveResourceOverload; count migrations against U = |B|·|V|
+  23-29 global constraint check; BacktrackForResourceViolations
+  30   return the assignment (or INFEASIBLE)
+
+Compute feasibility of a device at τ means: summed block processing time
+fits the interval deadline (C_j(τ)·deadline FLOPs) — see scoring.py for why
+the deadline normalization is needed.
+
+Beyond the pseudocode we also implement the objective-aware tie-break the
+text requires ("minimize D_T + D_mig"): when several devices score within
+``tie_tol`` of the best, prefer the one with the lowest marginal
+(migration + inference) delay contribution.  Disable with
+``objective_tiebreak=False`` for the ablation (tests cover both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ
+from repro.core.delay import memory_usage, total_delay
+from repro.core.network import DeviceNetwork
+from repro.core.scoring import score
+
+INFEASIBLE = None
+
+
+@dataclasses.dataclass
+class AlgoStats:
+    migrations: int = 0
+    backtracks: int = 0
+    elapsed: float = 0.0
+    infeasible: bool = False
+    score_evals: int = 0
+
+
+class ResourceAwareAssigner:
+    """The paper's myopic per-interval assignment policy."""
+
+    def __init__(self, blocks: Sequence[Block], cost: CostModel,
+                 *, deadline: float = 5.0, t_max: float = 10.0,
+                 objective_tiebreak: bool = True, tie_tol: float = 0.15,
+                 hysteresis: float = 0.9):
+        self.blocks = list(blocks)
+        self.cost = cost
+        self.deadline = deadline
+        self.t_max = t_max
+        self.objective_tiebreak = objective_tiebreak
+        self.tie_tol = tie_tol
+        # "at most one migration per head per interval to avoid back-and-forth
+        # overhead" (§III.D(a)): a block only leaves its device for a >=
+        # (1-hysteresis) score improvement — the anti-thrash discount.
+        self.hysteresis = hysteresis
+
+    # ------------------------------------------------------------------ API
+    def assign(self, net: DeviceNetwork, tau: int,
+               prev: Optional[np.ndarray] = None
+               ) -> tuple[Optional[np.ndarray], AlgoStats]:
+        stats = AlgoStats()
+        t0 = time.monotonic()
+        B, V = len(self.blocks), net.n_devices
+        U = B * V
+        mem = self.cost.memory_vector(self.blocks, tau)
+        comp = self.cost.compute_vector(self.blocks, tau)
+
+        # line 4: descending by memory demand (compute tie-break)
+        order = sorted(range(B), key=lambda i: (-mem[i], -comp[i]))
+
+        place = np.full(B, -1, dtype=int)
+        mem_used = np.zeros(V)
+        comp_used = np.zeros(V)
+
+        def assigned_ok(j) -> bool:
+            return (mem_used[j] <= net.mem_capacity[j] and
+                    comp_used[j] <= net.compute_avail[j] * self.deadline)
+
+        def do_place(i, j):
+            place[i] = j
+            mem_used[j] += mem[i]
+            comp_used[j] += comp[i]
+
+        def undo_place(i):
+            j = place[i]
+            if j >= 0:
+                mem_used[j] -= mem[i]
+                comp_used[j] -= comp[i]
+                place[i] = -1
+
+        def device_order(i: int) -> List[int]:
+            bl = self.blocks[i]
+            # Load-aware scores: free memory and queued compute on j are
+            # subtracted/added (Algorithm 1 line 10's aggregate check, folded
+            # into the score so the argmin spreads load instead of stacking
+            # everything on the roomiest device).
+            scores = np.array([
+                score(bl, j, self.blocks, prev, self.cost, net, tau,
+                      deadline=self.deadline, mem_used=mem_used,
+                      compute_used=comp_used) for j in range(V)])
+            stats.score_evals += V
+            if prev is not None:
+                scores[prev[i]] *= self.hysteresis  # anti-thrash stickiness
+            order = list(np.argsort(scores, kind="stable"))
+            if self.objective_tiebreak and prev is not None:
+                best = scores[order[0]]
+                ties = [j for j in order
+                        if scores[j] <= best * (1 + self.tie_tol) + 1e-12][:6]
+                if len(ties) > 1:
+                    def marginal(j):
+                        trial = place.copy()
+                        trial[i] = j
+                        filled = trial.copy()
+                        filled[filled < 0] = prev[filled < 0] if prev is not None else 0
+                        return total_delay(prev, filled, self.blocks,
+                                           self.cost, net, tau)
+                    ties.sort(key=marginal)
+                    rest = [j for j in order if j not in ties]
+                    order = ties + rest
+            return order
+
+        # lines 5-22 -----------------------------------------------------
+        for i in order:
+            if time.monotonic() - t0 > self.t_max:
+                return self._fail(stats, t0)
+            bl = self.blocks[i]
+            cand = device_order(i)
+            placed = False
+            for j in cand:
+                s = score(bl, j, self.blocks, prev, self.cost, net, tau,
+                          deadline=self.deadline)
+                if s > 1.0:
+                    break  # sorted: nothing further is individually feasible
+                do_place(i, j)
+                if assigned_ok(j):
+                    placed = True
+                    if prev is not None and prev[i] != j:
+                        stats.migrations += 1
+                        if stats.migrations > U:
+                            return self._fail(stats, t0)
+                    break
+                # line 10-14: revert + try to free capacity
+                undo_place(i)
+                if self._resolve_overload(i, j, place, mem_used, comp_used,
+                                          mem, comp, net, stats, U):
+                    do_place(i, j)
+                    placed = True
+                    break
+                stats.migrations += 1
+                if stats.migrations > U:
+                    return self._fail(stats, t0)
+            if not placed:
+                # lines 18-21: no device feasible for i alone
+                if not self._resolve_overload(i, None, place, mem_used,
+                                              comp_used, mem, comp, net,
+                                              stats, U):
+                    return self._fail(stats, t0)
+                # retry on the freshly freed device set
+                cand = device_order(i)
+                for j in cand:
+                    do_place(i, j)
+                    if assigned_ok(j):
+                        placed = True
+                        break
+                    undo_place(i)
+                if not placed:
+                    return self._fail(stats, t0)
+
+        # lines 23-29 ------------------------------------------------------
+        guard = 0
+        while not self._all_ok(place, mem_used, comp_used, net):
+            if guard > U or time.monotonic() - t0 > self.t_max:
+                return self._fail(stats, t0)
+            if not self._backtrack(place, mem_used, comp_used, mem, comp,
+                                   net, stats):
+                return self._fail(stats, t0)
+            stats.backtracks += 1
+            guard += 1
+
+        stats.elapsed = time.monotonic() - t0
+        return place, stats
+
+    # ------------------------------------------------------------- helpers
+    def _fail(self, stats: AlgoStats, t0) -> tuple[None, AlgoStats]:
+        stats.infeasible = True
+        stats.elapsed = time.monotonic() - t0
+        return INFEASIBLE, stats
+
+    def _all_ok(self, place, mem_used, comp_used, net) -> bool:
+        if (place < 0).any():
+            return False
+        return bool(np.all(mem_used <= net.mem_capacity + 1e-9) and
+                    np.all(comp_used <= net.compute_avail * self.deadline
+                           + 1e-9))
+
+    def _resolve_overload(self, i: int, target: Optional[int], place,
+                          mem_used, comp_used, mem, comp, net,
+                          stats: AlgoStats, U: int) -> bool:
+        """ResolveResourceOverload (§IV.B1): migrate already-placed blocks
+        away from the overloaded device (smallest sufficient set, smallest
+        blocks first) onto devices with headroom."""
+        need_mem = mem[i]
+        need_comp = comp[i]
+        devices = [target] if target is not None else \
+            list(np.argsort(mem_used))  # try least-loaded device first
+        for j in devices:
+            if j is None:
+                continue
+            movable = [k for k in range(len(place)) if place[k] == j and k != i]
+            movable.sort(key=lambda k: mem[k])
+            moved: List[tuple[int, int]] = []
+            for k in movable:
+                if (mem_used[j] + need_mem <= net.mem_capacity[j] and
+                        comp_used[j] + need_comp
+                        <= net.compute_avail[j] * self.deadline):
+                    break
+                dest = self._find_room(k, j, place, mem_used, comp_used,
+                                       mem, comp, net)
+                if dest is None:
+                    continue
+                place[k] = dest
+                mem_used[j] -= mem[k]
+                comp_used[j] -= comp[k]
+                mem_used[dest] += mem[k]
+                comp_used[dest] += comp[k]
+                moved.append((k, j))
+                stats.migrations += 1
+                if stats.migrations > U:
+                    return False
+            if (mem_used[j] + need_mem <= net.mem_capacity[j] and
+                    comp_used[j] + need_comp
+                    <= net.compute_avail[j] * self.deadline):
+                return True
+            # undo this device's moves and try the next candidate
+            for k, src in reversed(moved):
+                dest = place[k]
+                place[k] = src
+                mem_used[dest] -= mem[k]
+                comp_used[dest] -= comp[k]
+                mem_used[src] += mem[k]
+                comp_used[src] += comp[k]
+        return False
+
+    def _find_room(self, k: int, avoid: int, place, mem_used, comp_used,
+                   mem, comp, net) -> Optional[int]:
+        V = net.n_devices
+        best, best_slack = None, -np.inf
+        for j in range(V):
+            if j == avoid:
+                continue
+            if (mem_used[j] + mem[k] <= net.mem_capacity[j] and
+                    comp_used[j] + comp[k]
+                    <= net.compute_avail[j] * self.deadline):
+                slack = (net.mem_capacity[j] - mem_used[j] - mem[k]) \
+                    / net.mem_capacity[j]
+                if slack > best_slack:
+                    best, best_slack = j, slack
+        return best
+
+    def _backtrack(self, place, mem_used, comp_used, mem, comp, net,
+                   stats: AlgoStats) -> bool:
+        """BacktrackForResourceViolations (§IV.B2): remove a minimal set of
+        blocks from each violated device (largest first) and re-place them."""
+        progressed = False
+        for j in range(net.n_devices):
+            while (mem_used[j] > net.mem_capacity[j] + 1e-9 or
+                   comp_used[j] > net.compute_avail[j] * self.deadline + 1e-9):
+                on_j = [k for k in range(len(place)) if place[k] == j]
+                if not on_j:
+                    break
+                k = max(on_j, key=lambda t: mem[t])
+                dest = self._find_room(k, j, place, mem_used, comp_used,
+                                       mem, comp, net)
+                if dest is None:
+                    return False
+                place[k] = dest
+                mem_used[j] -= mem[k]
+                comp_used[j] -= comp[k]
+                mem_used[dest] += mem[k]
+                comp_used[dest] += comp[k]
+                progressed = True
+        return progressed

@@ -1,0 +1,338 @@
+"""Baseline partitioning policies (paper §V.A).
+
+Greedy / Round-Robin / Static / Dynamic are the paper's simple baselines;
+EdgeShard [1] and Galaxy [3] are the state-of-the-art comparisons. All share
+the ``Policy`` interface: ``place(net, tau, prev) -> placement | None``.
+
+EdgeShard  — layer-wise static sharding: each decoder *layer* is one block.
+  With the paper's single-layer model the whole layer (all heads + proj +
+  ffn) lands on one device, chosen once for the full horizon by maximizing
+  (memory headroom x compute): no adaptation, no K/V-growth handling.
+
+Galaxy     — static hybrid tensor+sequence parallelism: heads and ffn are
+  split evenly over all devices once (round-robin over the sorted-by-compute
+  device list); proj is co-located with the fastest device. Models Galaxy's
+  tensor-parallel sharding of each shard's matmuls; static during decoding.
+
+Both baselines inherit the *same* delay model — the comparison isolates the
+placement policy, exactly like the paper's simulator.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.algorithm import ResourceAwareAssigner
+from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ
+from repro.core.network import DeviceNetwork
+
+
+class Policy:
+    name = "base"
+
+    def __init__(self, blocks: Sequence[Block], cost: CostModel, **kw):
+        self.blocks = list(blocks)
+        self.cost = cost
+
+    def place(self, net: DeviceNetwork, tau: int,
+              prev: Optional[np.ndarray]) -> Optional[np.ndarray]:
+        raise NotImplementedError
+
+
+class ResourceAwarePolicy(Policy):
+    """Algorithm 1 + the objective refinement the paper's controller step
+    requires (§III.G: "minimizes D_T(τ) + D_mig(τ)"): each proposed block
+    migration is kept only if it lowers the myopic objective — migrations
+    whose delay exceeds their latency gain are reverted. Disable with
+    ``migration_filter=False`` for the ablation."""
+    name = "resource-aware"
+
+    def __init__(self, blocks, cost, *, deadline: float = 5.0,
+                 migration_filter: bool = True, **kw):
+        super().__init__(blocks, cost)
+        self.assigner = ResourceAwareAssigner(blocks, cost,
+                                              deadline=deadline, **kw)
+        self.migration_filter = migration_filter
+
+    def place(self, net, tau, prev):
+        placement, stats = self.assigner.assign(net, tau, prev)
+        self.last_stats = stats
+        if (placement is None or prev is None
+                or not self.migration_filter):
+            return placement
+        from repro.core.delay import memory_feasible, total_delay
+        current = placement.copy()
+        cur_val = total_delay(prev, current, self.blocks, self.cost, net, tau)
+        for i in np.flatnonzero(current != prev):
+            trial = current.copy()
+            trial[i] = prev[i]
+            if not memory_feasible(trial, self.blocks, self.cost, net, tau):
+                continue
+            val = total_delay(prev, trial, self.blocks, self.cost, net, tau)
+            if val <= cur_val:
+                current, cur_val = trial, val
+        return current
+
+
+class GreedyPolicy(Policy):
+    """Sort blocks by descending demand; place on the first feasible device
+    without re-checking feasibility in subsequent steps (§V.A)."""
+    name = "greedy"
+
+    def place(self, net, tau, prev):
+        mem = self.cost.memory_vector(self.blocks, tau)
+        order = np.argsort(-mem)
+        place = np.zeros(len(self.blocks), dtype=int)
+        for i in order:
+            placed = False
+            for j in range(net.n_devices):
+                if mem[i] <= net.mem_capacity[j]:
+                    place[i] = j          # no aggregate re-check: greedy
+                    placed = True
+                    break
+            if not placed:
+                place[i] = int(np.argmax(net.mem_capacity))
+        return place
+
+
+class RoundRobinPolicy(Policy):
+    """Cyclic assignment ignoring resource requirements (§V.A)."""
+    name = "round-robin"
+
+    def place(self, net, tau, prev):
+        return np.arange(len(self.blocks)) % net.n_devices
+
+
+class StaticPolicy(Policy):
+    """One initial resource-aware assignment, never migrated (§V.A)."""
+    name = "static"
+
+    def __init__(self, blocks, cost, **kw):
+        super().__init__(blocks, cost)
+        self._inner = ResourceAwarePolicy(blocks, cost, **kw)
+        self._frozen: Optional[np.ndarray] = None
+
+    def place(self, net, tau, prev):
+        if self._frozen is None:
+            self._frozen = self._inner.place(net, tau, None)
+        return self._frozen
+
+
+class DynamicLayerPolicy(Policy):
+    """Re-checks each interval but treats the layer as ONE block (§V.A):
+    the entire layer migrates to the single best device."""
+    name = "dynamic-layer"
+
+    def place(self, net, tau, prev):
+        mem_total = self.cost.memory_vector(self.blocks, tau).sum()
+        comp_total = self.cost.compute_vector(self.blocks, tau).sum()
+        best, best_t = None, np.inf
+        for j in range(net.n_devices):
+            if mem_total > net.mem_capacity[j]:
+                continue
+            t = comp_total / net.compute_avail[j]
+            if prev is not None and int(prev[0]) != j:
+                # whole-layer migration over the slowest involved link
+                t += mem_total / net.bandwidth[int(prev[0]), j]
+            if t < best_t:
+                best, best_t = j, t
+        if best is None:
+            best = int(np.argmax(net.mem_capacity))
+        return np.full(len(self.blocks), best, dtype=int)
+
+
+class _PipelinePolicy(Policy):
+    """Shared machinery for the layer-sharding SOTA baselines.
+
+    Both EdgeShard [1] and Galaxy [3] shard the model by *contiguous layer
+    groups*; a single decode token flows through the stages sequentially —
+    pipeline parallelism has no intra-token parallelism, which is exactly
+    the weakness the paper exploits.  Subclasses set the stage structure;
+    this class provides the per-step pipeline delay (``step_delay``) and
+    per-device memory (``device_memory``) hooks the simulator consumes,
+    plus the swap-stall overload semantics shared with Eq. 6-based
+    policies.
+
+    Per-layer costs are Table-I sums at n_layers=1 (heads + proj + ffn).
+    """
+    stages: list  # list of (device_list, n_layers_in_stage)
+
+    def __init__(self, blocks, cost, **kw):
+        super().__init__(blocks, cost)
+        import dataclasses as _dc
+        self._layer_cost = _dc.replace(cost, n_layers=1)
+        self.stages = []
+
+    # one layer's aggregate compute / memory ------------------------------
+    def _layer_compute(self, tau: int) -> float:
+        return float(sum(self._layer_cost.compute(b, tau) for b in self.blocks))
+
+    def _layer_memory(self, tau: int) -> float:
+        return float(sum(self._layer_cost.memory(b, tau) for b in self.blocks))
+
+    def _boundary_bytes(self, tau: int) -> float:
+        return self._layer_cost.proj_to_ffn_bytes(tau)  # activations D·b(·L)
+
+    # simulator hooks ------------------------------------------------------
+    def device_memory(self, net: DeviceNetwork, tau: int) -> np.ndarray:
+        use = np.zeros(net.n_devices)
+        per_layer = self._layer_memory(tau)
+        for devs, n_layers in self.stages:
+            share = per_layer * n_layers / len(devs)
+            for j in devs:
+                use[j] += share
+        return use
+
+    def step_delay(self, net: DeviceNetwork, tau: int) -> float:
+        """Sequential pipeline traversal of one token."""
+        t = 0.0
+        per_layer = self._layer_compute(tau)
+        prev_exit = net.controller
+        for devs, n_layers in self.stages:
+            # TP within the stage: compute split over members, bounded by the
+            # slowest member; per-layer TP sync of 2 all-gathers of D·b over
+            # the weakest intra-stage link (Galaxy's tensor parallelism).
+            slowest = min(net.compute_avail[j] for j in devs)
+            t += n_layers * per_layer / (len(devs) * slowest)
+            if len(devs) > 1:
+                intra = min(net.bandwidth[a, b] for a in devs for b in devs
+                            if a != b)
+                t += n_layers * 2 * self._boundary_bytes(tau) / intra
+            entry = devs[0]
+            if entry != prev_exit:
+                t += self._boundary_bytes(tau) / net.bandwidth[prev_exit, entry]
+            prev_exit = devs[-1]
+        return t
+
+
+class EdgeShardPolicy(_PipelinePolicy):
+    """EdgeShard [1]: static layer-wise shards, one device per stage, layer
+    counts proportional to device compute; device subset chosen once at τ=1
+    to fit the τ=1 footprint (no K/V-growth adaptation — the paper's
+    criticism)."""
+    name = "edgeshard"
+
+    def place(self, net, tau, prev):
+        if not self.stages:
+            L = self.cost.n_layers
+            order = list(np.argsort(-net.compute_avail))
+            mem_l1 = self._layer_memory(1)
+            # smallest fast subset whose τ=1 memory fits
+            chosen: list = []
+            for j in order:
+                chosen.append(j)
+                cap = sum(net.mem_capacity[k] for k in chosen)
+                if cap >= L * mem_l1 and len(chosen) >= 2:
+                    break
+            speeds = np.array([net.compute_avail[j] for j in chosen])
+            shares = np.maximum(1, np.round(L * speeds / speeds.sum())).astype(int)
+            while shares.sum() > L:
+                shares[np.argmax(shares)] -= 1
+            while shares.sum() < L:
+                shares[np.argmax(speeds)] += 1
+            self.stages = [([j], int(s)) for j, s in zip(chosen, shares)]
+        # representative block-level placement (metrics only): everything on
+        # the first stage's device
+        return np.full(len(self.blocks), self.stages[0][0][0], dtype=int)
+
+
+class GalaxyPolicy(_PipelinePolicy):
+    """Galaxy [3]: hybrid pipeline + tensor parallelism — devices grouped
+    into TP islands of size ``tp``; contiguous layer shards proportional to
+    island compute; static during decoding."""
+    name = "galaxy"
+
+    def __init__(self, blocks, cost, *, tp: int = 4, **kw):
+        super().__init__(blocks, cost, **kw)
+        self.tp = tp
+
+    def place(self, net, tau, prev):
+        if not self.stages:
+            L = self.cost.n_layers
+            order = list(np.argsort(-net.compute_avail))
+            groups = [order[i:i + self.tp] for i in
+                      range(0, len(order) - self.tp + 1, self.tp)]
+            if not groups:
+                groups = [order]
+            agg = np.array([sum(net.compute_avail[j] for j in g)
+                            for g in groups])
+            shares = np.maximum(0, np.round(L * agg / agg.sum())).astype(int)
+            while shares.sum() > L:
+                shares[np.argmax(shares)] -= 1
+            while shares.sum() < L:
+                shares[np.argmax(agg)] += 1
+            self.stages = [(g, int(s)) for g, s in zip(groups, shares) if s > 0]
+        return np.full(len(self.blocks), self.stages[0][0][0], dtype=int)
+
+
+class LookaheadPolicy(ResourceAwarePolicy):
+    """Beyond-paper: the paper's stated future work (§VI — "incorporate
+    limited foresight ... predict resource availability ahead of time").
+
+    Per-device EWMA + trend forecast of C_j over the next ``horizon``
+    intervals; Algorithm 1 runs against the forecast *average* (placements
+    stop chasing transient dips), and the migration filter amortizes the
+    one-time migration cost over the horizon (a move pays if
+    horizon·ΔD_T > D_mig instead of 1·ΔD_T > D_mig).
+    """
+    name = "lookahead"
+
+    def __init__(self, blocks, cost, *, horizon: int = 8, ewma: float = 0.5,
+                 **kw):
+        super().__init__(blocks, cost, **kw)
+        self.horizon = horizon
+        self.ewma = ewma
+        self._level: Optional[np.ndarray] = None
+        self._trend: Optional[np.ndarray] = None
+
+    def _forecast(self, net: DeviceNetwork) -> np.ndarray:
+        obs = net.compute_avail.astype(float)
+        if self._level is None:
+            self._level = obs.copy()
+            self._trend = np.zeros_like(obs)
+        else:
+            prev = self._level.copy()
+            self._level = self.ewma * obs + (1 - self.ewma) * \
+                (self._level + self._trend)
+            self._trend = 0.3 * (self._level - prev) + 0.7 * self._trend
+        # mean forecast over the horizon, clipped to physical bounds
+        steps = np.arange(1, self.horizon + 1).mean()
+        pred = self._level + steps * self._trend
+        return np.clip(pred, 0.05 * net.compute_max, net.compute_max)
+
+    def place(self, net, tau, prev):
+        pred_net = net.copy()
+        pred_net.compute_avail = self._forecast(net)
+        placement, stats = self.assigner.assign(pred_net, tau, prev)
+        self.last_stats = stats
+        if placement is None or prev is None or not self.migration_filter:
+            return placement
+        from repro.core.delay import (inference_delay, memory_feasible,
+                                      migration_delay)
+        current = placement.copy()
+
+        def amortized(pl):
+            # horizon intervals of inference + one migration
+            return self.horizon * inference_delay(
+                pl, self.blocks, self.cost, pred_net, tau) + \
+                migration_delay(prev, pl, self.blocks, self.cost,
+                                pred_net, tau)
+
+        cur_val = amortized(current)
+        for i in np.flatnonzero(current != prev):
+            trial = current.copy()
+            trial[i] = prev[i]
+            if not memory_feasible(trial, self.blocks, self.cost, net, tau):
+                continue
+            val = amortized(trial)
+            if val <= cur_val:
+                current, cur_val = trial, val
+        return current
+
+
+ALL_POLICIES = {
+    p.name: p for p in (ResourceAwarePolicy, GreedyPolicy, RoundRobinPolicy,
+                        StaticPolicy, DynamicLayerPolicy, EdgeShardPolicy,
+                        GalaxyPolicy, LookaheadPolicy)
+}

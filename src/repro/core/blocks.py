@@ -1,0 +1,144 @@
+"""Block set B = H ∪ {ffn, proj} and the Table-I resource model (paper §III.C).
+
+Memory m_i(τ) and compute b_i(τ) per block at interval τ, with λ=1 token per
+interval so the sequence length is L_τ = L0 + τ.
+
+Table I (d = D/h, b = bytes/param):
+  head i : mem 3·L·d·b + 3·D·d·b            compute 3·L·D·d + L²·d
+  cache  : mem τ·D·b (attached to its head)  —
+  proj   : mem L·D·b                         compute L·D²
+  ffn    : mem 4·L·D·b                       compute 8·L·D²
+
+``cache_mode``:
+  "paper"   — per-head cache τ·D·b exactly as printed (§III.C says m_i(τ)
+              includes "the K/V cache of attention head i plus its params").
+  "precise" — per-head K+V is 2·τ·d·b (beyond-paper studies; DESIGN.md §7).
+
+``compute_mode``:
+  "paper"       — full-sequence reprocessing per interval, as in Table I.
+  "incremental" — KV-cache-reusing decode: one new token costs
+                  3·D·d + 2·L·d MACs per head (the TPU bridge uses this).
+
+Communication volumes (Eq. 3/4): W_{i→proj} = L·d·b, W_{proj→ffn} = L·D·b
+("paper"); incremental mode sends only the new token's activations
+(d·b and D·b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+FFN = "ffn"
+PROJ = "proj"
+HEAD = "head"
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    index: int           # position in the block list
+    kind: str            # head | ffn | proj
+    head_id: int = -1    # for kind == head
+
+    @property
+    def name(self) -> str:
+        return f"head{self.head_id}" if self.kind == HEAD else self.kind
+
+
+def make_blocks(n_heads: int) -> List[Block]:
+    blocks = [Block(i, HEAD, head_id=i) for i in range(n_heads)]
+    blocks.append(Block(n_heads, PROJ))
+    blocks.append(Block(n_heads + 1, FFN))
+    return blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Table-I resource usage for a single decoder layer.
+
+    ``n_layers`` extends the single-layer model to the paper's "GPT-2/LLaMA
+    scale" evaluation (§V.B): a *block* becomes the per-head column across
+    all layers (the paper notes the approach "can be applied independently
+    to each layer"; co-partitioning the columns is the natural multi-layer
+    lift and is what reproduces the paper's GB-scale memory figures —
+    EXPERIMENTS.md §Reproduction notes).  All memory/compute/communication
+    volumes scale by n_layers; n_layers=1 is Table I exactly as printed.
+    """
+
+    d_model: int                 # D
+    n_heads: int                 # h
+    bytes_per_param: int = 2     # b
+    L0: int = 64                 # prompt length
+    lam: int = 1                 # λ tokens per interval
+    n_layers: int = 1
+    cache_mode: str = "paper"
+    compute_mode: str = "paper"
+    flops_per_mac: int = 2       # Table I counts MACs; FLOPs = 2x
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def seq_len(self, tau: int) -> int:
+        return self.L0 + self.lam * tau
+
+    # ----------------------------------------------------------- memory
+    def memory(self, block: Block, tau: int) -> float:
+        D, d, b = self.d_model, self.d_head, self.bytes_per_param
+        L = self.seq_len(tau)
+        if block.kind == HEAD:
+            base = 3 * L * d * b + 3 * D * d * b
+            if self.cache_mode == "paper":
+                cache = tau * D * b
+            else:
+                cache = 2 * tau * d * b
+            return float(self.n_layers * (base + cache))
+        if block.kind == PROJ:
+            return float(self.n_layers * L * D * b)
+        return float(self.n_layers * 4 * L * D * b)  # ffn
+
+    # ----------------------------------------------------------- compute
+    def compute(self, block: Block, tau: int) -> float:
+        D, d = self.d_model, self.d_head
+        L = self.seq_len(tau)
+        f = self.flops_per_mac * self.n_layers
+        if self.compute_mode == "paper":
+            if block.kind == HEAD:
+                return float(f * (3 * L * D * d + L * L * d))
+            if block.kind == PROJ:
+                return float(f * (L * D * D))
+            return float(f * (8 * L * D * D))
+        # incremental: only the λ new tokens are processed
+        n = self.lam
+        if block.kind == HEAD:
+            return float(f * n * (3 * D * d + 2 * L * d))
+        if block.kind == PROJ:
+            return float(f * n * (D * D))
+        return float(f * n * (8 * D * D))
+
+    # ------------------------------------------------------ communication
+    def head_to_proj_bytes(self, tau: int) -> float:
+        d, b = self.d_head, self.bytes_per_param
+        L = self.seq_len(tau)
+        n = L if self.compute_mode == "paper" else self.lam
+        return float(self.n_layers * n * d * b)
+
+    def proj_to_ffn_bytes(self, tau: int) -> float:
+        D, b = self.d_model, self.bytes_per_param
+        L = self.seq_len(tau)
+        n = L if self.compute_mode == "paper" else self.lam
+        return float(self.n_layers * n * D * b)
+
+    def input_bytes(self, tau: int) -> float:
+        """Controller -> head-device token embeddings."""
+        D, b = self.d_model, self.bytes_per_param
+        n = self.seq_len(tau) if self.compute_mode == "paper" else self.lam
+        return float(n * D * b)
+
+    # vectors over the standard block list -----------------------------------
+    def memory_vector(self, blocks: Sequence[Block], tau: int):
+        import numpy as np
+        return np.array([self.memory(bl, tau) for bl in blocks])
+
+    def compute_vector(self, blocks: Sequence[Block], tau: int):
+        import numpy as np
+        return np.array([self.compute(bl, tau) for bl in blocks])

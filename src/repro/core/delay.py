@@ -1,0 +1,108 @@
+"""Delay model — Eq. (2)–(7) of the paper.
+
+A placement is an int array ``place[block_index] -> device``.
+
+Total inference delay at interval τ (Eq. 6, with the natural completion of
+the pipeline: proj and ffn processing included — the paper's equation lists
+the communication terms explicitly and §III.E(b) defines processing delays
+for *every* block; ``strict_eq6=True`` reproduces the bare printed form):
+
+  D_T = max_{i∈H}( D_in→d(i) + D_proc(i) + D_{d(i)→d(proj)} )
+        [+ D_proc(proj)] + D_{d(proj)→d(ffn)} [+ D_proc(ffn)]
+
+Concurrency semantics (§III.E/F):
+ - compute: blocks co-located on a device run sequentially — a head's
+   processing term uses the *sum* of head compute on its device;
+ - links: transfers sharing a directed link (j,k) are serialized — each
+   head's comm term uses the summed volume on its link.
+
+Migration (Eq. 2/7): D_mig = Σ_i m_i(τ-1)/R_{j,k}(τ), serialized per link.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ
+from repro.core.network import DeviceNetwork
+
+
+def _rate(net: DeviceNetwork, j: int, k: int) -> float:
+    if j == k:
+        return np.inf
+    return float(net.bandwidth[j, k])
+
+
+def inference_delay(place: np.ndarray, blocks: Sequence[Block],
+                    cost: CostModel, net: DeviceNetwork, tau: int,
+                    *, strict_eq6: bool = False) -> float:
+    """D_T(τ) per Eq. 6 for placement ``place``."""
+    heads = [b for b in blocks if b.kind == HEAD]
+    proj = next(b for b in blocks if b.kind == PROJ)
+    ffn = next(b for b in blocks if b.kind == FFN)
+    d_proj, d_ffn = int(place[proj.index]), int(place[ffn.index])
+
+    # per-device summed head compute (sequential sharing)
+    head_compute_on = np.zeros(net.n_devices)
+    for h in heads:
+        head_compute_on[place[h.index]] += cost.compute(h, tau)
+    # per-link summed head->proj volume (serialized sharing)
+    vol_to_proj = np.zeros(net.n_devices)
+    w_head = cost.head_to_proj_bytes(tau)
+    for h in heads:
+        vol_to_proj[place[h.index]] += w_head
+
+    worst = 0.0
+    w_in = cost.input_bytes(tau)
+    for h in heads:
+        j = int(place[h.index])
+        t_in = w_in / _rate(net, net.controller, j)
+        t_proc = head_compute_on[j] / net.compute_avail[j]
+        t_out = vol_to_proj[j] / _rate(net, j, d_proj)
+        worst = max(worst, t_in + t_proc + t_out)
+
+    total = worst
+    if not strict_eq6:
+        total += cost.compute(proj, tau) / net.compute_avail[d_proj]
+    total += cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn)
+    if not strict_eq6:
+        total += cost.compute(ffn, tau) / net.compute_avail[d_ffn]
+    return float(total)
+
+
+def migration_delay(prev: Optional[np.ndarray], place: np.ndarray,
+                    blocks: Sequence[Block], cost: CostModel,
+                    net: DeviceNetwork, tau: int) -> float:
+    """Eq. (7): serialized migrations, block footprint at τ-1 (Eq. 2)."""
+    if prev is None:
+        return 0.0
+    total = 0.0
+    for bl in blocks:
+        j, k = int(prev[bl.index]), int(place[bl.index])
+        if j != k:
+            total += cost.memory(bl, tau - 1) / _rate(net, j, k)
+    return float(total)
+
+
+def total_delay(prev: Optional[np.ndarray], place: np.ndarray,
+                blocks: Sequence[Block], cost: CostModel,
+                net: DeviceNetwork, tau: int, *,
+                strict_eq6: bool = False) -> float:
+    return inference_delay(place, blocks, cost, net, tau,
+                           strict_eq6=strict_eq6) + \
+        migration_delay(prev, place, blocks, cost, net, tau)
+
+
+def memory_usage(place: np.ndarray, blocks: Sequence[Block],
+                 cost: CostModel, net: DeviceNetwork, tau: int) -> np.ndarray:
+    use = np.zeros(net.n_devices)
+    for bl in blocks:
+        use[place[bl.index]] += cost.memory(bl, tau)
+    return use
+
+
+def memory_feasible(place: np.ndarray, blocks: Sequence[Block],
+                    cost: CostModel, net: DeviceNetwork, tau: int) -> bool:
+    return bool(np.all(memory_usage(place, blocks, cost, net, tau)
+                       <= net.mem_capacity + 1e-9))

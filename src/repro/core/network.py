@@ -1,0 +1,141 @@
+"""Edge-device network model (paper §III.B).
+
+Devices are heterogeneous: memory M_j(τ), max compute W_j, available compute
+C_j(τ) <= W_j (background load), link bandwidths R_{j,k}(τ).  Sampled from
+log-normal distributions per §V.B(b): M in [2,8] GB, C in [5,50] GFLOPS,
+links in [1,10] Gbps, full connectivity.  Background tasks are injected as a
+multiplicative availability process (mean-reverting), matching the paper's
+"inject background tasks to emulate fluctuating compute load".
+
+The same class doubles as the TPU-bridge capacity model: ``from_mesh``
+builds a homogeneous device set from mesh topology (hop-scaled ICI), with
+straggler injection for the fault-tolerance runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+GB = 1024 ** 3
+GFLOPS = 1e9
+GBPS = 1e9 / 8  # bytes/sec per Gbps
+
+
+@dataclasses.dataclass
+class DeviceNetwork:
+    """State of |V| devices and the |V|x|V| link matrix at interval tau."""
+
+    mem_capacity: np.ndarray      # (V,) bytes, M_j(tau)
+    compute_max: np.ndarray       # (V,) FLOP/s, W_j
+    compute_avail: np.ndarray     # (V,) FLOP/s, C_j(tau)
+    bandwidth: np.ndarray         # (V,V) bytes/s, R_{j,k}(tau)
+    controller: int = 0           # node issuing inference requests
+    rng: Optional[np.random.Generator] = None
+    # background-load process parameters (§V.B "inject background tasks"):
+    # tasks arrive per-device with prob `bg_arrival` per interval, consume a
+    # U[0.3,0.7] fraction of W_j, and depart with prob 1/bg_duration —
+    # persistent load shifts, plus small white-noise jitter.
+    bg_volatility: float = 0.05
+    bg_floor: float = 0.1
+    bg_arrival: float = 0.01
+    bg_duration: float = 150.0
+    _bg_tasks: Optional[list] = None  # per-device list of load fractions
+    _pinned_load: Optional["np.ndarray"] = None  # injected stragglers
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.mem_capacity)
+
+    # ------------------------------------------------------------- sampling
+    @classmethod
+    def sample(cls, n_devices: int, seed: int = 0, *,
+               mem_range=(2 * GB, 8 * GB),
+               compute_range=(5 * GFLOPS, 50 * GFLOPS),
+               bw_range=(1 * GBPS, 10 * GBPS),
+               controller: int = 0) -> "DeviceNetwork":
+        """Log-normal heterogeneity clipped to the paper's ranges (§V.B)."""
+        rng = np.random.default_rng(seed)
+
+        def lognormal_in(lo, hi, size):
+            mu, sigma = 0.0, 0.5
+            raw = rng.lognormal(mu, sigma, size)
+            # map quantiles of the lognormal into [lo, hi]
+            lo_q, hi_q = np.exp(mu - 2 * sigma), np.exp(mu + 2 * sigma)
+            x = np.clip((raw - lo_q) / (hi_q - lo_q), 0.0, 1.0)
+            return lo + x * (hi - lo)
+
+        mem = lognormal_in(*mem_range, n_devices)
+        wmax = lognormal_in(*compute_range, n_devices)
+        bw = lognormal_in(*bw_range, (n_devices, n_devices))
+        bw = (bw + bw.T) / 2.0
+        np.fill_diagonal(bw, np.inf)  # same-device transfer is free
+        return cls(mem_capacity=mem, compute_max=wmax,
+                   compute_avail=wmax.copy(), bandwidth=bw,
+                   controller=controller, rng=rng)
+
+    @classmethod
+    def from_mesh(cls, shape, *, hbm_bytes=16 * GB, peak_flops=197e12,
+                  link_bw=50e9, seed: int = 0) -> "DeviceNetwork":
+        """Homogeneous TPU slice: devices = mesh slots; R_{j,k} = ICI bw
+        scaled by inverse hop count on the torus (DESIGN.md §2)."""
+        coords = np.array(np.unravel_index(np.arange(np.prod(shape)), shape)).T
+        n = len(coords)
+        hops = np.zeros((n, n))
+        for d, size in enumerate(shape):
+            diff = np.abs(coords[:, None, d] - coords[None, :, d])
+            hops += np.minimum(diff, size - diff)  # torus wrap
+        hops = np.maximum(hops, 1)
+        bw = link_bw / hops
+        np.fill_diagonal(bw, np.inf)
+        return cls(mem_capacity=np.full(n, float(hbm_bytes)),
+                   compute_max=np.full(n, float(peak_flops)),
+                   compute_avail=np.full(n, float(peak_flops)),
+                   bandwidth=bw, controller=0,
+                   rng=np.random.default_rng(seed))
+
+    # ----------------------------------------------------------- dynamics
+    def step_background_load(self):
+        """Persistent background-task arrivals/departures + jitter."""
+        assert self.rng is not None
+        if self._bg_tasks is None:
+            self._bg_tasks = [[] for _ in range(self.n_devices)]
+        for j in range(self.n_devices):
+            # departures
+            self._bg_tasks[j] = [f for f in self._bg_tasks[j]
+                                 if self.rng.random() > 1.0 / self.bg_duration]
+            # arrivals
+            if self.rng.random() < self.bg_arrival:
+                self._bg_tasks[j].append(float(self.rng.uniform(0.3, 0.7)))
+            load = sum(self._bg_tasks[j])
+            pinned = 0.0 if self._pinned_load is None else self._pinned_load[j]
+            jitter = self.rng.normal(0.0, self.bg_volatility)
+            # injected stragglers may sink below the organic-load floor
+            floor = self.bg_floor * (0.1 if pinned > 0 else 1.0)
+            frac = np.clip(1.0 - load - pinned + jitter, floor, 1.0)
+            self.compute_avail[j] = self.compute_max[j] * frac
+
+    def inject_straggler(self, device: int, slowdown: float):
+        """Fault-tolerance hook: device becomes `slowdown`x slower,
+        persistently (survives step_background_load as pinned load)."""
+        if self._pinned_load is None:
+            self._pinned_load = np.zeros(self.n_devices)
+        self._pinned_load[device] = 1.0 - 1.0 / slowdown
+        self.compute_avail[device] = self.compute_max[device] / slowdown
+
+    def restore(self, device: int):
+        if self._pinned_load is not None:
+            self._pinned_load[device] = 0.0
+        self.compute_avail[device] = self.compute_max[device]
+
+    def copy(self) -> "DeviceNetwork":
+        return DeviceNetwork(self.mem_capacity.copy(), self.compute_max.copy(),
+                             self.compute_avail.copy(), self.bandwidth.copy(),
+                             self.controller, self.rng,
+                             self.bg_volatility, self.bg_floor,
+                             self.bg_arrival, self.bg_duration,
+                             None if self._bg_tasks is None else
+                             [list(t) for t in self._bg_tasks],
+                             None if self._pinned_load is None else
+                             self._pinned_load.copy())

@@ -1,0 +1,312 @@
+"""Placement bridge: Algorithm 1's block→device assignment realized as a
+TPU sharding (DESIGN.md §2/§4).
+
+SPMD cannot place arbitrary programs per chip, but an *arbitrary head→slot
+assignment* is exactly a permutation of the head axis composed with the
+regular head-sharded PartitionSpec: slot s of the "model" axis holds heads
+``perm[s*Hp/tp : (s+1)*Hp/tp]``.  Placement changes are permutation-index
+changes; applying the delta permutation to the KV cache *is* the paper's
+migration, and lowers to the collective-permute traffic Eq. (2) prices.
+
+Also here: path-based parameter PartitionSpecs (the params side of the
+head-level TP layout models express via activation constraints).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.blocks import Block, HEAD
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-1 placement -> head permutation
+# ---------------------------------------------------------------------------
+
+
+def placement_to_perm(place: np.ndarray, blocks: Sequence[Block],
+                      n_slots: int, heads_per_slot: int) -> np.ndarray:
+    """Maps a block placement (head i -> device j) onto a head permutation.
+
+    Head-blocks assigned to slot j occupy that slot's contiguous positions.
+    If the assignment is unbalanced (more heads on a device than
+    heads_per_slot — legal at the edge, not under SPMD) the overflow spills
+    to the next slots round-robin; the spill count is reported so the
+    controller can price it as extra migrations.
+    """
+    head_ids = [b.head_id for b in blocks if b.kind == HEAD]
+    n_heads = len(head_ids)
+    assert n_slots * heads_per_slot >= n_heads
+    buckets: List[List[int]] = [[] for _ in range(n_slots)]
+    spilled: List[int] = []
+    for b in blocks:
+        if b.kind != HEAD:
+            continue
+        j = int(place[b.index]) % n_slots
+        if len(buckets[j]) < heads_per_slot:
+            buckets[j].append(b.head_id)
+        else:
+            spilled.append(b.head_id)
+    for h in spilled:
+        j = int(np.argmin([len(bk) for bk in buckets]))
+        buckets[j].append(h)
+    perm = []
+    for bk in buckets:
+        perm.extend(bk)
+        perm.extend([-1] * (heads_per_slot - len(bk)))  # padded positions
+    # fill padding with the unused (padded) head ids
+    unused = [h for h in range(n_slots * heads_per_slot) if h not in perm]
+    out = np.array(perm)
+    out[out == -1] = unused
+    return out
+
+
+def migration_pairs(old_perm: np.ndarray, new_perm: np.ndarray,
+                    heads_per_slot: int) -> List[Tuple[int, int, int]]:
+    """(head, src_slot, dst_slot) for every head whose slot changes."""
+    slot_of_old = {h: i // heads_per_slot for i, h in enumerate(old_perm)}
+    out = []
+    for i, h in enumerate(new_perm):
+        src, dst = slot_of_old[int(h)], i // heads_per_slot
+        if src != dst:
+            out.append((int(h), src, dst))
+    return out
+
+
+def apply_head_perm(cache_k, cache_v, perm, head_axis: int = 3):
+    """Reorders the expanded-KV head axis of a stacked cache
+    ((L, B, T, KvE, dh) by default).  Under a head-sharded mesh this gather
+    lowers to collective-permute / all-to-all between slots — the physical
+    migration."""
+    idx = jnp.asarray(perm)
+    return (jnp.take(cache_k, idx, axis=head_axis),
+            jnp.take(cache_v, idx, axis=head_axis))
+
+
+def migration_bytes(pairs: Sequence[Tuple[int, int, int]],
+                    bytes_per_head: float) -> float:
+    return float(len(pairs) * bytes_per_head)
+
+
+def permute_model_heads(params, perm, *, has_bias: bool = False):
+    """Physically relocate attention heads: permute the head axis of the
+    per-head weight slices so head i lands on the mesh slot Algorithm 1
+    chose.  Attention is permutation-equivariant over heads (wo sums over
+    them), so the model *function* is bit-identical — only the placement
+    (which chip holds which head) changes.  Valid as-is for MHA layouts
+    (KvE == Hp, rep == 1); GQA archs migrate at group granularity.
+
+    params: full model params (stacked layers supported via negative axes).
+    """
+    idx = jnp.asarray(perm)
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k == "attn" and isinstance(v, dict):
+                    a = dict(v)
+                    a["wq"] = jnp.take(v["wq"], idx, axis=-2)
+                    a["wk"] = jnp.take(v["wk"], idx, axis=-2)
+                    a["wv"] = jnp.take(v["wv"], idx, axis=-2)
+                    a["wo"] = jnp.take(v["wo"], idx, axis=-3)
+                    for b in ("bq", "bk", "bv"):
+                        if b in v:
+                            a[b] = jnp.take(v[b], idx, axis=-2)
+                    out[k] = a
+                else:
+                    out[k] = visit(v)
+            return out
+        return tree
+
+    return visit(params)
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs (path-based rules)
+# ---------------------------------------------------------------------------
+
+def _path_names(path) -> List[str]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return names
+
+
+def param_spec(path_names: List[str], ndim: int, cfg: ModelConfig,
+               tp: int, *, fsdp: bool, pod_ep: bool,
+               layout: str = "tp", shape: tuple = (),
+               n_devices: int = 256) -> P:
+    """Trailing-dims spec for one parameter, padded with leading Nones
+    (stacked-layer axes are never sharded)."""
+    name = path_names[-1] if path_names else ""
+    quant_part = None
+    if name in ("q8", "sc") and len(path_names) >= 2:
+        quant_part = name
+        name = path_names[-2]          # rules keyed by the weight name
+    in_attn = "attn" in path_names
+    if layout == "zero3":
+        # every axis is DP: shard each param over the flattened device set
+        # on its largest evenly-divisible dim (gathered per layer on use);
+        # small/indivisible leaves stay replicated.
+        if quant_part == "sc" or ndim <= 1 or not shape:
+            return P(*([None] * ndim))
+        axes: list = [None] * ndim
+        cands = sorted(range(ndim), key=lambda d: -shape[d])
+        for d in cands:
+            if shape[d] % n_devices == 0:
+                axes[d] = ("data", "model")
+                return P(*axes)
+        for d in cands:  # partial sharding over one axis still helps
+            if shape[d] % tp == 0:
+                axes[d] = "model"
+                return P(*axes)
+        return P(*([None] * ndim))
+    F = "data" if fsdp else None
+    kv_ok = cfg.n_kv_heads == 0 or cfg.n_kv_heads % tp == 0 \
+        or cfg.n_heads % tp != 0  # padded archs keep Kp divisible too
+    KV = "model" if (cfg.expanded_kv_heads(tp) and
+                     cfg.padded_heads(tp) and kv_ok) else None
+    EP = "pod" if pod_ep else None
+
+    trailing: Optional[tuple] = None
+    if name == "tok_embed":
+        trailing = ("model", F)
+    elif name == "lm_head":
+        trailing = (F, "model")
+    elif in_attn and name == "wq":
+        trailing = (F, "model", None)
+    elif in_attn and name in ("wk", "wv"):
+        trailing = (F, KV, None)
+    elif in_attn and name == "wo":
+        trailing = ("model", None, F)
+    elif in_attn and name == "bq":
+        trailing = ("model", None)
+    elif in_attn and name in ("bk", "bv"):
+        trailing = (KV, None)
+    elif name in ("w_gate", "w_up"):
+        # dense (D,F) or moe (E,D,F)
+        trailing = (EP, F, "model") if ndim >= 3 else (F, "model")
+    elif name == "w_down":
+        trailing = (EP, "model", F) if ndim >= 3 else ("model", F)
+    elif name == "b_up":
+        trailing = ("model",)
+    elif name == "router":
+        trailing = (None, None)
+    # rwkv6 time/channel mix
+    elif name in ("wr", "wk", "wv", "wg", "wcr"):
+        trailing = (F, "model")
+    elif name == "wo" and not in_attn:
+        trailing = ("model", F)
+    elif name == "wck":
+        trailing = (F, "model")
+    elif name == "wcv":
+        trailing = ("model", F)
+    elif name == "lora_A":
+        trailing = (F, None)
+    elif name == "u":
+        trailing = ("model", None)
+    # mamba2
+    elif name == "w_in":
+        trailing = (F, "model")
+    elif name == "w_out":
+        trailing = ("model", F)
+
+    if trailing is None:
+        trailing = ()
+    if quant_part == "sc":
+        # per-last-axis scale vector: inherits the weight's last-dim spec
+        trailing = trailing[-1:] if trailing else ()
+    trailing = tuple(trailing[-ndim:]) if ndim < len(trailing) else trailing
+    lead = (None,) * (ndim - len(trailing))
+    return P(*(lead + tuple(trailing)))
+
+
+def param_shardings(params_tree, cfg: ModelConfig, mesh: Mesh, *,
+                    fsdp: bool = False, layout: str = "tp"):
+    """NamedSharding pytree for params (or any mirrored state like AdamW
+    moments)."""
+    tp = mesh.shape["model"]
+    pod_ep = cfg.is_moe and "pod" in mesh.axis_names
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        ndim = len(leaf.shape)
+        specs.append(NamedSharding(
+            mesh, param_spec(names, ndim, cfg, tp, fsdp=fsdp,
+                             pod_ep=pod_ep, layout=layout,
+                             shape=tuple(leaf.shape),
+                             n_devices=mesh.size)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_shardings(batch_tree, mesh: Mesh, layout: str = "tp"):
+    """Token batches: batch dim over (pod?, data) — or the whole mesh for
+    zero3; everything else replicated."""
+    if layout == "zero3":
+        data_axes = tuple(mesh.axis_names)
+    else:
+        data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def shard(leaf):
+        spec = [data_axes] + [None] * (leaf.ndim - 1) if leaf.ndim >= 1 else []
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(shard, batch_tree)
+
+
+def decode_state_shardings(state_tree, cfg: ModelConfig, mesh: Mesh, *,
+                           seq_over_data: bool = False):
+    """KV caches: (lead..., B, T, KvE, dh) -> batch over data, heads over
+    model (co-location invariant). long_500k (batch=1): cache seq over data.
+    SSM states: (lead..., B, H, dh, ns|dh) -> heads over model."""
+    data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    # long_500k runs at batch=1: nothing can shard over data except the
+    # cache sequence dim; SSM/shift states keep batch unsharded.
+    batch_axes = None if seq_over_data else data_axes
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_tree)
+    out = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        nm = names[-1]
+        ndim = leaf.ndim
+        if nm in ("k", "v") and "img_kv" in names:
+            # static image KV: (G, B, I, KvE, dh)
+            spec = [None] * (ndim - 4) + [batch_axes, None, "model", None]
+        elif nm in ("k", "v") and ndim >= 4:
+            # (lead..., B, T, KvE, dh); long_500k shards T over data instead
+            if seq_over_data:
+                spec = [None] * (ndim - 4) + [None, "data", "model", None]
+            else:
+                spec = [None] * (ndim - 4) + [batch_axes, None, "model", None]
+        elif nm in ("k_sc", "v_sc") and ndim >= 3:    # (lead,B,T,KvE)
+            if seq_over_data:
+                spec = [None] * (ndim - 3) + [None, "data", "model"]
+            else:
+                spec = [None] * (ndim - 3) + [batch_axes, None, "model"]
+        elif nm == "wkv" and ndim >= 4:               # rwkv (lead,B,H,dh,dh)
+            spec = [None] * (ndim - 4) + [batch_axes, "model", None, None]
+        elif nm == "ssm" and ndim >= 4:               # mamba (lead,B,nh,dh,ns)
+            spec = [None] * (ndim - 4) + [batch_axes, "model", None, None]
+        elif nm == "conv" and ndim >= 3:              # (lead,B,cw-1,C)
+            spec = [None] * (ndim - 3) + [batch_axes, None, "model"]
+        elif nm in ("shift_t", "shift_c") and ndim >= 2:
+            spec = [None] * (ndim - 2) + [batch_axes, None]
+        elif nm == "pos":
+            spec = []
+        elif ndim >= 1:
+            spec = [batch_axes] + [None] * (ndim - 1)
+        else:
+            spec = []
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,88 @@
+"""Scoring function S(i,j,τ) — paper §IV.A(a).
+
+  S(i,j,τ) = max{ m_i(τ)/M_j(τ),  b_i(τ)/C_j(τ)·(1/T_budget),  CommFactor }
+
+The paper leaves two scalings implicit; we make them explicit and testable:
+
+ - the compute ratio b_i/C_j has units of seconds, while m_i/M_j is
+   dimensionless.  A device is "individually feasible" when S <= 1, so the
+   time-like terms are normalized by ``deadline`` — the wall-clock budget of
+   one interval (the paper sizes intervals "on the order of a few seconds";
+   default 5 s, exposed as a parameter and swept in the tests).
+
+ - CommFactor(i,j,τ) "approximates data transfer times if i must exchange
+   information with blocks on different devices": for a head it is the
+   transfer time of its output to proj's current device plus the input
+   delivery from the controller; for proj, max of inbound-head and
+   outbound-ffn transfers; for ffn, the inbound transfer — all normalized by
+   the same deadline.  Counterpart devices are read from the *previous*
+   placement (the controller's best current knowledge).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ
+from repro.core.network import DeviceNetwork
+
+
+def comm_factor(block: Block, j: int, blocks: Sequence[Block],
+                prev_place: Optional[np.ndarray], cost: CostModel,
+                net: DeviceNetwork, tau: int, deadline: float) -> float:
+    def rate(a, b):
+        return np.inf if a == b else float(net.bandwidth[a, b])
+
+    if prev_place is None:
+        # before the first placement only the controller's link is known
+        if block.kind == HEAD:
+            return cost.input_bytes(tau) / rate(net.controller, j) / deadline
+        return 0.0
+    proj_dev = int(prev_place[next(b.index for b in blocks if b.kind == PROJ)])
+    ffn_dev = int(prev_place[next(b.index for b in blocks if b.kind == FFN)])
+    if block.kind == HEAD:
+        t = cost.input_bytes(tau) / rate(net.controller, j)
+        t += cost.head_to_proj_bytes(tau) / rate(j, proj_dev)
+        return t / deadline
+    if block.kind == PROJ:
+        t_in = cost.head_to_proj_bytes(tau) * cost.n_heads  # worst-case inbound
+        t = max(t_in / min(rate(h_dev, j) for h_dev in
+                           set(int(prev_place[b.index]) for b in blocks
+                               if b.kind == HEAD)),
+                cost.proj_to_ffn_bytes(tau) / rate(j, ffn_dev))
+        return t / deadline
+    # ffn
+    return cost.proj_to_ffn_bytes(tau) / rate(proj_dev, j) / deadline
+
+
+def score(block: Block, j: int, blocks: Sequence[Block],
+          prev_place: Optional[np.ndarray], cost: CostModel,
+          net: DeviceNetwork, tau: int, *, deadline: float = 5.0,
+          mem_used: Optional[np.ndarray] = None,
+          compute_used: Optional[np.ndarray] = None) -> float:
+    """S(i,j,τ).  ``mem_used``/``compute_used`` optionally subtract already-
+    assigned load on j (the per-block score in the paper is load-free; the
+    algorithm's constraint check handles concurrency — §IV.A)."""
+    mem_cap = net.mem_capacity[j] - (0.0 if mem_used is None else mem_used[j])
+    if mem_cap <= 0:
+        return np.inf
+    mem_term = cost.memory(block, tau) / mem_cap
+    comp_avail = net.compute_avail[j]
+    comp_term = (cost.compute(block, tau) +
+                 (0.0 if compute_used is None else compute_used[j])) \
+        / comp_avail / deadline
+    cf = comm_factor(block, j, blocks, prev_place, cost, net, tau, deadline)
+    return float(max(mem_term, comp_term, cf))
+
+
+def score_matrix(blocks: Sequence[Block], prev_place: Optional[np.ndarray],
+                 cost: CostModel, net: DeviceNetwork, tau: int,
+                 *, deadline: float = 5.0) -> np.ndarray:
+    """(|B|, |V|) matrix of S(i,j,τ)."""
+    S = np.empty((len(blocks), net.n_devices))
+    for bl in blocks:
+        for j in range(net.n_devices):
+            S[bl.index, j] = score(bl, j, blocks, prev_place, cost, net, tau,
+                                   deadline=deadline)
+    return S

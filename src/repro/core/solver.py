@@ -1,0 +1,80 @@
+"""Exact solvers for the small-scale evaluation (paper §V.C).
+
+``exact_myopic``  — exhaustive search over all |V|^|B| placements at one
+interval, minimizing D_T(τ) + D_mig(τ) under the memory constraint: the
+optimal *myopic* decision the heuristic approximates.
+
+``exact_horizon`` — full-horizon DP over (interval, placement) when a priori
+resource knowledge is assumed (§III.G), used only for very small instances;
+the state space is |V|^|B| per stage.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.blocks import Block, CostModel
+from repro.core.delay import memory_feasible, total_delay
+from repro.core.network import DeviceNetwork
+
+
+def _all_placements(n_blocks: int, n_devices: int):
+    for combo in itertools.product(range(n_devices), repeat=n_blocks):
+        yield np.array(combo, dtype=int)
+
+
+def exact_myopic(blocks: Sequence[Block], cost: CostModel,
+                 net: DeviceNetwork, tau: int,
+                 prev: Optional[np.ndarray] = None,
+                 *, strict_eq6: bool = False
+                 ) -> Tuple[Optional[np.ndarray], float]:
+    best, best_val = None, np.inf
+    for place in _all_placements(len(blocks), net.n_devices):
+        if not memory_feasible(place, blocks, cost, net, tau):
+            continue
+        val = total_delay(prev, place, blocks, cost, net, tau,
+                          strict_eq6=strict_eq6)
+        if val < best_val:
+            best, best_val = place.copy(), val
+    return best, best_val
+
+
+def exact_horizon(blocks: Sequence[Block], cost: CostModel,
+                  nets: List[DeviceNetwork], *, strict_eq6: bool = False
+                  ) -> Tuple[List[np.ndarray], float]:
+    """DP over intervals 1..T given per-interval resource snapshots."""
+    states = [p for p in _all_placements(len(blocks), nets[0].n_devices)]
+    n = len(states)
+    INF = np.inf
+    # stage 1: no migration cost
+    val = np.full(n, INF)
+    parent = np.full((len(nets), n), -1, dtype=int)
+    for s, p in enumerate(states):
+        if memory_feasible(p, blocks, cost, nets[0], 1):
+            val[s] = total_delay(None, p, blocks, cost, nets[0], 1,
+                                 strict_eq6=strict_eq6)
+    for t in range(1, len(nets)):
+        tau = t + 1
+        new_val = np.full(n, INF)
+        for s, p in enumerate(states):
+            if not memory_feasible(p, blocks, cost, nets[t], tau):
+                continue
+            for s0, p0 in enumerate(states):
+                if val[s0] == INF:
+                    continue
+                v = val[s0] + total_delay(p0, p, blocks, cost, nets[t], tau,
+                                          strict_eq6=strict_eq6)
+                if v < new_val[s]:
+                    new_val[s] = v
+                    parent[t, s] = s0
+        val = new_val
+    s = int(np.argmin(val))
+    best_total = float(val[s])
+    path = [states[s]]
+    for t in range(len(nets) - 1, 0, -1):
+        s = int(parent[t, s])
+        path.append(states[s])
+    path.reverse()
+    return path, best_total

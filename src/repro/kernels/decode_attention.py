@@ -1,0 +1,202 @@
+"""Pallas TPU flash-decode: one query token vs a long head-sharded KV cache
+— the paper's dominant inference object (growing K/V caches).
+
+Grid (B, H, nk): kv blocks stream through VMEM sequentially while (m, l,
+acc) persist in scratch. The valid cache length arrives via scalar prefetch
+(SMEM) so fully-invalid kv blocks are skipped — decode cost tracks the
+*actual* sequence length, not the cache capacity, which is exactly the
+m_i(τ)-growth behaviour the paper's cost model prices.
+
+``decode_attention_int8`` is the fused int8-KV variant (EXPERIMENTS.md
+§Perf H1/H3 note): the kernel reads the int8 cache + per-(token, head)
+scales directly from HBM and dequantizes in VMEM — cache read traffic is
+halved vs bf16, which is what makes the optimized decode cells approach
+the resident-state roofline on TPU.
+
+VMEM per step ≈ 2·bk·dh·bytes + dh·4; bk=1024, dh=128, bf16 ⇒ ~0.5 MB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 1024
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bk: int, nk: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ik * bk
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (1, dh)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_ref[...]                                # (1, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _kernel_int8(len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, scale: float, bk: int, nk: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ik * bk
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                    # (1, dh)
+        # fused dequant in VMEM: int8 block + per-token scales
+        ksc = ks_ref[0, 0].astype(jnp.float32)                 # (bk, 1)
+        vsc = vs_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32) * ksc              # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32) * vsc
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_int8(q, k_q8, k_sc, v_q8, v_sc, lengths, *,
+                          bk: int = DEFAULT_BK, interpret: bool = False):
+    """q: (B,H,dh) bf16/f32; k_q8/v_q8: (B,KvE,T,dh) int8;
+    k_sc/v_sc: (B,KvE,T) f32 per-(token, head) scales; lengths: (B,)."""
+    B, H, dh = q.shape
+    KvE, T = k_q8.shape[1], k_q8.shape[2]
+    assert H % KvE == 0
+    bk = min(bk, T)
+    assert T % bk == 0, (T, bk)
+    nk = T // bk
+    G = H // KvE
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q[:, :, None, :]
+    ks4 = k_sc[..., None]                                      # (B,KvE,T,1)
+    vs4 = v_sc[..., None]
+
+    kernel = functools.partial(_kernel_int8, scale=scale, bk=bk, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, ik, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, 1),
+                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, 1),
+                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda b, h, ik, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, dh), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q4, k_q8, ks4, v_q8, vs4)
+    return out[:, :, 0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k, v, lengths, *, bk: int = DEFAULT_BK,
+                     interpret: bool = False):
+    """q: (B,H,dh); k,v: (B,KvE,T,dh); lengths: (B,) int32 valid lengths.
+    Returns (B,H,dh)."""
+    B, H, dh = q.shape
+    KvE, T = k.shape[1], k.shape[2]
+    assert H % KvE == 0
+    bk = min(bk, T)
+    assert T % bk == 0, (T, bk)
+    nk = T // bk
+    G = H // KvE
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q[:, :, None, :]                                  # (B,H,1,dh)
+
+    kernel = functools.partial(_kernel, scale=scale, bk=bk, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, ik, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda b, h, ik, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, dh), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q4, k, v)
+    return out[:, :, 0, :]

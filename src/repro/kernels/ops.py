@@ -1,0 +1,46 @@
+"""Public jit'd wrappers for the Pallas kernels, in model-layout
+((B, S, H, dh)) with shape checks and automatic interpret-mode on CPU.
+
+These are the TPU hot paths the model code dispatches to when
+``use_kernel=True``; the pure-jnp paths in the model modules remain the
+oracles (kernels/ref.py mirrors them in kernel layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rwkv6_kernel import rwkv6_chunked as _rwkv6
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,
+                         interpret: bool | None = None):
+    """Model layout: q (B,S,H,dh), k/v (B,T,KvE,dh) -> (B,S,H,dh)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    o = _flash(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+               v.transpose(0, 2, 1, 3), causal=causal, window=window,
+               interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def decode_attention_bshd(q, k, v, lengths, *, interpret: bool | None = None):
+    """q (B,1,H,dh), cache k/v (B,T,KvE,dh), lengths (B,) -> (B,1,H,dh)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    o = _decode(q[:, 0], k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                lengths, interpret=interpret)
+    return o[:, None]
+
+
+def rwkv6(r, k, v, w, u, state, *, interpret: bool | None = None):
+    """Model layout: r/k/v/w (B,S,H,dh), u (H,dh), state (B,H,dh,dh).
+    Returns y (B,S,H,dh) f32, new state."""
+    interpret = _on_cpu() if interpret is None else interpret
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    y, sT = _rwkv6(tr(r), tr(k), tr(v), tr(w), u, state, interpret=interpret)
+    return y.transpose(0, 2, 1, 3), sT

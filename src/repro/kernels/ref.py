@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+Layouts match the kernels: attention uses (B, H, S, dh); the model-side
+wrappers in ops.py transpose from the model's (B, S, H, dh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: (B,H,Sq,dh); k,v: (B,KvE,Skv,dh). GQA: H % KvE == 0.
+    Returns (B,H,Sq,dh) in q.dtype; softmax in f32."""
+    B, H, Sq, dh = q.shape
+    KvE, Skv = k.shape[1], k.shape[2]
+    G = H // KvE
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qg = q.reshape(B, KvE, G, Sq, dh)
+    s = jnp.einsum("begsd,betd->begst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Skv)[None, :]
+        mask = kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("begst,betd->begsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale: float | None = None):
+    """q: (B,H,dh) one query token; k,v: (B,KvE,T,dh); lengths: (B,) valid
+    cache lengths. Returns (B,H,dh)."""
+    B, H, dh = q.shape
+    KvE, T = k.shape[1], k.shape[2]
+    G = H // KvE
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qg = q.reshape(B, KvE, G, dh)
+    s = jnp.einsum("begd,betd->begt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(T)[None, :] < lengths[:, None]          # (B,T)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("begt,betd->begd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, w, u, state):
+    """WKV6 recurrence. r,k,v,w: (B,H,S,dh); u: (H,dh);
+    state: (B,H,dh,dh) f32 (S[i,j] = key i, value j).
+    Returns y (B,H,S,dh) f32, final state."""
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, rkvw):
+        r_t, k_t, v_t, w_t = rkvw                  # (B,H,dh)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S)
+        bonus = jnp.einsum("bhi,hi,bhi->bh", r_t, u, k_t)
+        y = y + bonus[..., None] * v_t
+        S = w_t[..., None] * S + k_t[..., None] * v_t[:, :, None, :]
+        return S, y
+
+    seq = tuple(jnp.moveaxis(t, 2, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 2), state

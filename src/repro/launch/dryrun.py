@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  jax.jit(step, in_shardings, out_shardings).lower(**input_specs).compile()
+must succeed on the (16,16) single-pod mesh and the (2,16,16) multi-pod
+mesh; we record memory_analysis / cost_analysis / collective-byte parse
+into results/dryrun/*.json for the roofline table (deliverable g).
+
+The device-count override above MUST precede any other import — jax locks
+the device count on first init.  Run:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k [--multi-pod] [--fsdp auto|on|off] [--out DIR]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, cell_is_runnable, get_config
+from repro.core.placement_bridge import (batch_shardings,
+                                         decode_state_shardings,
+                                         param_shardings)
+from repro.launch.hlo_analysis import collective_bytes, full_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+from repro.models.api import N_IMAGE_TOKENS, build_model, input_specs
+from repro.models.partitioning import make_partitioner
+from repro.optim.adamw import AdamW, AdamWState
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def serve_needs_fsdp(cfg) -> bool:
+    """Params bf16 under pure TP16 must leave room for the KV cache."""
+    return cfg.param_count() * 2 / 16 > 6e9
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               fsdp: str = "auto", remat: str = "full",
+               capacity_moe: bool = False, extra_tags: dict | None = None,
+               quant_serve: bool = False, kv_int8: bool = False,
+               layout: str = "tp"):
+    """Returns (jitted_fn, abstract_args) for one dry-run cell."""
+    cfg = get_config(arch)
+    if kv_int8:
+        cfg = cfg.with_overrides(kv_quant=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    seq_over_data = shape.kind == "long-decode"
+    if shape.kind == "train":
+        use_fsdp = fsdp != "off"
+    else:
+        use_fsdp = serve_needs_fsdp(cfg) if fsdp == "auto" else fsdp == "on"
+    use_sp = shape.kind == "train" and layout == "tp"
+    part = make_partitioner(mesh, fsdp=use_fsdp, seq_over_data=seq_over_data,
+                            sp=use_sp, layout=layout)
+    # capacity-bucketed MoE dispatch for long-sequence cells (dense
+    # dispatch is O(E/top_k) FLOP-inflated and memory-hungry); decode keeps
+    # dense dispatch (1 token, negligible).
+    use_cap = capacity_moe or (cfg.is_moe and shape.kind in ("train", "prefill"))
+    model = build_model(cfg, tp=tp, part=part,
+                        remat=remat if shape.kind == "train" else "none",
+                        capacity_moe=use_cap)
+    if quant_serve:
+        # int8 weight-only serving: TP-resident int8 params, no FSDP gather
+        use_fsdp = False
+        part = make_partitioner(mesh, fsdp=False, seq_over_data=seq_over_data,
+                                sp=use_sp)
+        model = build_model(cfg, tp=tp, part=part,
+                            remat="none", capacity_moe=use_cap)
+    specs = input_specs(cfg, shape)
+    if quant_serve:
+        from repro.models.quantization import quantize_params
+        params_shape = jax.eval_shape(
+            lambda k: quantize_params(model.init(k)), jax.random.PRNGKey(0))
+    else:
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(params_shape, cfg, mesh, fsdp=use_fsdp,
+                           layout=layout)
+    B, S = shape.global_batch, shape.seq_len
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "fsdp": use_fsdp, "remat": remat if shape.kind == "train" else "none",
+            "seq_over_data": seq_over_data, "tp": tp, "sp": use_sp,
+            "capacity_moe": use_cap, "quant_serve": quant_serve,
+            "kv_int8": kv_int8, "layout": layout}
+    if extra_tags:
+        meta.update(extra_tags)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=3e-4)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_sh = AdamWState(step=NamedSharding(mesh, P()),
+                          mu=param_shardings(opt_shape.mu, cfg, mesh,
+                                             fsdp=use_fsdp, layout=layout),
+                          nu=param_shardings(opt_shape.nu, cfg, mesh,
+                                             fsdp=use_fsdp, layout=layout))
+        b_sh = batch_shardings(specs, mesh, layout=layout)
+        step = make_train_step(model, opt)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1))
+        batch = dict(specs)
+        if cfg.family == "train-vlm":
+            pass
+        return fn, (params_shape, opt_shape, batch), mesh, meta
+
+    # inference shapes ----------------------------------------------------
+    extras = {}
+    if cfg.family == "vlm":
+        extras["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, N_IMAGE_TOKENS, cfg.d_model), jnp.dtype(cfg.dtype))
+        extras["img_mask"] = jax.ShapeDtypeStruct((B, N_IMAGE_TOKENS),
+                                                  jnp.bool_)
+    state_shape = jax.eval_shape(
+        lambda p, **kw: model.init_decode_state(p, B, S, **kw),
+        params_shape, **extras)
+    s_sh = decode_state_shardings(state_shape, cfg, mesh,
+                                  seq_over_data=seq_over_data)
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+        tok = specs["tokens"]
+        tok_sh = batch_shardings({"tokens": tok}, mesh)["tokens"]
+        out_logits_sh = NamedSharding(
+            mesh, P(("pod", "data") if multi_pod else ("data",), "model"))
+        fn = jax.jit(step, in_shardings=(p_sh, s_sh, tok_sh),
+                     out_shardings=(out_logits_sh, s_sh),
+                     donate_argnums=(1,))
+        return fn, (params_shape, state_shape, tok), mesh, meta
+    # decode / long-decode
+    step = make_decode_step(model)
+    tok = specs["tokens"]
+    if seq_over_data:
+        tok_sh = NamedSharding(mesh, P())       # batch=1: replicated token
+        out_logits_sh = NamedSharding(mesh, P(None, "model"))
+    else:
+        tok_sh = batch_shardings({"tokens": tok}, mesh)["tokens"]
+        out_logits_sh = NamedSharding(
+            mesh, P(("pod", "data") if multi_pod else ("data",), "model"))
+    fn = jax.jit(step, in_shardings=(p_sh, s_sh, tok_sh),
+                 out_shardings=(out_logits_sh, s_sh),
+                 donate_argnums=(1,))
+    return fn, (params_shape, state_shape, tok), mesh, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             fsdp: str = "auto", remat: str = "full",
+             capacity_moe: bool = False, out_dir: Path = RESULTS_DIR,
+             tag: str = "", extra_tags: dict | None = None,
+             quant_serve: bool = False, kv_int8: bool = False,
+             layout: str = "tp") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    name = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    record: dict = {"cell": name}
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        (out_dir / f"{name}.json").write_text(json.dumps(record, indent=1))
+        print(f"[dryrun] {name}: SKIPPED ({why})")
+        return record
+    t0 = time.time()
+    try:
+        fn, args, mesh, meta = build_cell(arch, shape_name, multi_pod,
+                                          fsdp=fsdp, remat=remat,
+                                          capacity_moe=capacity_moe,
+                                          extra_tags=extra_tags,
+                                          quant_serve=quant_serve,
+                                          kv_int8=kv_int8, layout=layout)
+        record.update(meta)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        cost_d = {k: float(v) for k, v in dict(cost).items()
+                  if isinstance(v, (int, float))}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        counts = coll.pop("_counts")
+        # trip-aware FLOP/byte analysis (CPU cost_analysis counts while
+        # bodies once — verified; see hlo_analysis.py)
+        fa = full_analysis(hlo)
+        record.update(
+            status="ok", lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory_analysis=mem_d,
+            flops=cost_d.get("flops", 0.0),
+            bytes_accessed=cost_d.get("bytes accessed", 0.0),
+            cost_analysis={k: v for k, v in cost_d.items()
+                           if k in ("flops", "bytes accessed",
+                                    "bytes accessed output",
+                                    "optimal_seconds")},
+            collective_bytes=coll, collective_counts=counts,
+            dot_flops=fa["dot_flops"], hbm_bytes=fa["hbm_bytes"],
+            hlo_bytes=len(hlo),
+        )
+        print(f"[dryrun] {name}: OK lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s flops={record['flops']:.3e} "
+              f"coll_bytes={sum(coll.values()):.3e} "
+              f"temp={mem_d.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"args={mem_d.get('argument_size_in_bytes', 0)/2**30:.2f}GiB")
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {name}: ERROR {type(e).__name__}: {e}")
+    (out_dir / f"{name}.json").write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) on the single-pod mesh")
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots", "dots_no_batch"])
+    ap.add_argument("--capacity-moe", action="store_true")
+    ap.add_argument("--quant-serve", action="store_true",
+                    help="int8 weight-only params, TP-resident (no FSDP)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache with per-token-head scales")
+    ap.add_argument("--layout", default="tp", choices=["tp", "zero3"],
+                    help="zero3 = pure FSDP over the whole mesh (no TP)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape_name in SHAPES:
+                run_cell(arch, shape_name, args.multi_pod, fsdp=args.fsdp,
+                         remat=args.remat, capacity_moe=args.capacity_moe,
+                         out_dir=out_dir, tag=args.tag)
+        return
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    run_cell(args.arch, args.shape, args.multi_pod, fsdp=args.fsdp,
+             remat=args.remat, capacity_moe=args.capacity_moe,
+             out_dir=out_dir, tag=args.tag, quant_serve=args.quant_serve,
+             kv_int8=args.kv_int8, layout=args.layout)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production meshes (deliverable e).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.  Single pod: (16, 16) = 256 chips, axes
+("data", "model"); multi-pod: (2, 16, 16) = 512 chips with the extra "pod"
+axis (outer data parallelism / expert parallelism).
+
+TPU v5e constants used by the roofline analysis (benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+SINGLE_POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def tp_degree(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def dp_degree(mesh) -> int:
+    d = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        d *= mesh.shape["pod"]
+    return d
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (requires host-platform device override)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,30 @@
+"""Jittable train / prefill / decode step builders shared by the launcher,
+the dry-run, and the examples."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW, AdamWState
+
+
+def make_train_step(model, opt: AdamW):
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, Any]):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, state, tokens):
+        return model.prefill(params, state, tokens)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+    return decode_step

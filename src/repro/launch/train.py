@@ -1,0 +1,109 @@
+"""Training driver: data pipeline -> jit train step -> checkpointing ->
+restart-on-failure; single-host CPU uses reduced configs, TPU slices use
+the production mesh + shardings from the dry-run cell builder.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt /tmp/ckpt [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models.api import build_model
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+
+
+def reduced_for_cpu(cfg, d_model=256, n_layers=4):
+    over = dict(n_layers=n_layers, d_model=d_model,
+                d_ff=d_model * 4, vocab_size=4096,
+                dtype="float32", param_dtype="float32")
+    if cfg.n_heads:
+        over.update(n_heads=8, n_kv_heads=min(8, cfg.n_kv_heads or 8),
+                    d_head=d_model // 8)
+    if cfg.family == "vlm":
+        over["n_layers"] = 5
+    if cfg.family == "hybrid":
+        over.update(n_layers=4, shared_attn_every=2)
+    if cfg.is_moe:
+        over["n_experts"] = 4
+    return cfg.with_overrides(**over)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-gpt")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_for_cpu(cfg, args.d_model, args.n_layers)
+    model = build_model(cfg)
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=20, total=args.steps))
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+
+    src = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=0)
+    it = iter(src)
+    ck = Checkpointer(args.ckpt)
+    monitor = HeartbeatMonitor(jax.device_count())
+
+    start = 0
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    if args.resume and ck.latest_step() is not None:
+        start = ck.latest_step()
+        state = ck.restore(start, {"params": params, "opt": opt_state,
+                                   "data": src.state_dict()})
+        params, opt_state = state["params"], state["opt"]
+        src.load_state_dict(state["data"])
+        it = iter(src)
+        print(f"[train] resumed from step {start}")
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq}")
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        t0 = time.time()
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        loss = float(loss)
+        dt = time.time() - t0
+        monitor.record_step(0, dt)
+        if (i + 1) % args.log_every == 0 or i == start:
+            tps = args.batch * args.seq / dt
+            print(f"[train] step {i+1:5d} loss={loss:.4f} "
+                  f"{dt*1e3:7.1f} ms/step {tps:9.0f} tok/s")
+        if (i + 1) % args.ckpt_every == 0:
+            ck.save_async(i + 1, {"params": params, "opt": opt_state,
+                                  "data": src.state_dict()})
+    ck.wait()
+    ck.save(args.steps, {"params": params, "opt": opt_state,
+                         "data": src.state_dict()})
+    print(f"[train] done; final loss={loss:.4f}; "
+          f"checkpoints at {args.ckpt}")
+    return loss
+
+
+if __name__ == "__main__":
+    main()

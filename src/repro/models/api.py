@@ -1,0 +1,77 @@
+"""Unified model API: ``build_model(cfg)`` returns an object with
+
+  init(key) -> params
+  forward(params, tokens, **extras) -> (logits, aux)
+  loss(params, batch) -> scalar
+  init_decode_state(params, batch, max_seq, **extras) -> state
+  prefill(params, state, tokens) -> (logits, state)
+  decode_step(params, state, tokens) -> (logits, state)
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input of
+a (arch x shape) cell — weak-type-correct, shardable, no device allocation —
+used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.partitioning import NULL, Partitioner
+from repro.models.rwkv6 import RWKV6Model
+from repro.models.transformer import TransformerLM
+from repro.models.zamba2 import Zamba2Model
+
+
+def build_model(cfg: ModelConfig, *, tp: int = 1, part: Partitioner = NULL,
+                remat: str = "none", **kw):
+    if cfg.family == "ssm":
+        return RWKV6Model(cfg, tp=tp, part=part, remat=remat,
+                          use_kernel=kw.get("use_kernel", False))
+    if cfg.family == "hybrid":
+        return Zamba2Model(cfg, tp=tp, part=part, remat=remat)
+    return TransformerLM(cfg, tp=tp, part=part, remat=remat,
+                         capacity_moe=kw.get("capacity_moe", False),
+                         capacity_factor=kw.get("capacity_factor", 1.25))
+
+
+# ---------------------------------------------------------------------------
+# Stub modality frontends (assignment: [vlm]/[audio] backbones only)
+# ---------------------------------------------------------------------------
+
+N_IMAGE_TOKENS = 1601   # llama-3.2-vision tile embedding count (stub)
+
+
+def batch_extras(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    """Extra (stubbed) frontend inputs for a batch: precomputed patch/frame
+    embeddings per the assignment."""
+    if cfg.family == "vlm":
+        return {
+            "img_embeds": jnp.zeros((batch, N_IMAGE_TOKENS, cfg.d_model), dtype),
+            "img_mask": jnp.ones((batch, N_IMAGE_TOKENS), jnp.bool_),
+        }
+    return {}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((B, S), tok), "labels": sds((B, S), tok)}
+        if cfg.family == "vlm":
+            specs["img_embeds"] = sds((B, N_IMAGE_TOKENS, cfg.d_model), act)
+            specs["img_mask"] = sds((B, N_IMAGE_TOKENS), jnp.bool_)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), tok)}
+        if cfg.family == "vlm":
+            specs["img_embeds"] = sds((B, N_IMAGE_TOKENS, cfg.d_model), act)
+            specs["img_mask"] = sds((B, N_IMAGE_TOKENS), jnp.bool_)
+        return specs
+    # decode / long-decode: one new token given a cache of seq_len
+    return {"tokens": sds((B,), tok)}

@@ -1,0 +1,122 @@
+"""Mamba-2 (SSD) block — used by the Zamba2 hybrid backbone.
+
+Simplified-but-real SSD: fused in-proj -> (z, x, B, C, dt), causal depthwise
+conv over (x,B,C), scalar-per-head decay a = exp(-exp(A_log)*dt), state
+h in R^{nh x dh x n_state}, y = C.h + D*x, gated RMSNorm, out-proj.
+ngroups = 1. Decode state: conv tail (width-1 tokens) + SSM state h — O(1)
+in sequence length.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.partitioning import NULL, Partitioner
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv
+
+
+def init_mamba_layer(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_in, nh, dh, ns, cw = mamba_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * ns
+    return {
+        "ln": jnp.ones((D,), dt),
+        "w_in": L.dense_init(ks[0], D, (D, 2 * d_in + 2 * ns + nh), dt),
+        "conv_w": L.dense_init(ks[1], cw, (cw, conv_ch), dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dt),
+        "w_out": L.dense_init(ks[2], d_in, (d_in, D), dt),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv. xBC: (B,S,C); conv_w: (cw,C).
+    conv_state: (B,cw-1,C) tail of the previous chunk (decode) or None
+    (prefill, zero history). Returns (out (B,S,C), new_state)."""
+    B, S, C = xBC.shape
+    cw = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, cw - 1, C), xBC.dtype)
+    full = jnp.concatenate([conv_state, xBC], axis=1)      # (B, S+cw-1, C)
+    # windows: out[t] = sum_i w[i] * full[t+i]
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(cw):
+        out = out + full[:, i:i + S, :].astype(jnp.float32) * \
+            conv_w[i].astype(jnp.float32)
+    out = out + conv_b.astype(jnp.float32)
+    new_state = full[:, -(cw - 1):, :]
+    return jax.nn.silu(out).astype(xBC.dtype), new_state
+
+
+def ssd_scan(xh, Bt, Ct, a, dtv, h0):
+    """SSD recurrence (oracle, f32).
+
+    xh: (B,S,nh,dh); Bt,Ct: (B,S,ns); a: (B,S,nh) decay in (0,1);
+    dtv: (B,S,nh); h0: (B,nh,dh,ns). Returns y (B,S,nh,dh), hT.
+    """
+    xh, Bt, Ct, a, dtv = (t.astype(jnp.float32) for t in (xh, Bt, Ct, a, dtv))
+
+    def step(h, inp):
+        x_t, b_t, c_t, a_t, dt_t = inp
+        dx = x_t * dt_t[..., None]                          # (B,nh,dh)
+        h = a_t[..., None, None] * h + dx[..., None] * b_t[:, None, None, :]
+        y = jnp.einsum("bhds,bs->bhd", h, c_t)
+        return h, y
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, Bt, Ct, a, dtv))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x, state: Dict, part: Partitioner):
+    """x: (B,S,D); state {"conv": (B,cw-1,C), "ssm": (B,nh,dh,ns)} or zeros.
+    Returns (out, new_state)."""
+    D = cfg.d_model
+    d_in, nh, dh, ns, cw = mamba_dims(cfg)
+    B, S, _ = x.shape
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["w_in"]
+    z, xs, Bt, Ct, dtl = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1)
+    xBC = jnp.concatenate([xs, Bt, Ct], axis=-1)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], state["conv"])
+    xs, Bt, Ct = jnp.split(xBC, [d_in, d_in + ns], axis=-1)
+    dtv = jax.nn.softplus(dtl.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dtv)                         # (B,S,nh)
+    xh = xs.reshape(B, S, nh, dh)
+    xh = part.constrain(xh, ("batch", "seq", "ssm_heads", None))
+    y, new_ssm = ssd_scan(xh, Bt, Ct, a, dtv, state["ssm"])
+    new_ssm = part.constrain(new_ssm, ("batch", "ssm_heads", None, None))
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (mamba2's norm(y * silu(z)))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = part.constrain(y, ("batch", "seq", "d_ff"))
+    out = y @ p["w_out"]
+    return part.constrain(out, ("batch", "res_seq", "d_model")), \
+        {"conv": new_conv, "ssm": new_ssm}
+
+
+def zero_mamba_state(cfg: ModelConfig, batch: int, lead=()):
+    d_in, nh, dh, ns, cw = mamba_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    C = d_in + 2 * ns
+    return {
+        "conv": jnp.zeros(lead + (batch, cw - 1, C), dt),
+        "ssm": jnp.zeros(lead + (batch, nh, dh, ns), jnp.float32),
+    }

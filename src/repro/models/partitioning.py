@@ -1,0 +1,144 @@
+"""Logical-axis partitioning (MaxText-style axis rules).
+
+Models annotate intermediates with *logical* axis names; a
+:class:`Partitioner` maps them to mesh axes and applies
+``with_sharding_constraint``.  The default :class:`NullPartitioner` is a
+no-op so every model runs unsharded on one device (smoke tests).
+
+Logical axes used across the codebase::
+
+  batch seq heads kv_heads head_dim d_model d_ff vocab experts
+  ssm_heads ssm_state cache_seq img_seq
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxis = Union[None, str, Tuple[str, ...]]
+
+
+class Partitioner:
+    """Maps logical axis names to mesh axes and constrains intermediates."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Dict[str, MeshAxis]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    # -- specs ---------------------------------------------------------------
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        used: set = set()
+        parts = []
+        for ax in axes:
+            m = self.rules.get(ax) if ax is not None else None
+            # a mesh axis may appear at most once in a spec; later wins -> None
+            if m is None:
+                parts.append(None)
+                continue
+            key = tuple(m) if isinstance(m, tuple) else (m,)
+            if used & set(key):
+                parts.append(None)
+                continue
+            used |= set(key)
+            parts.append(m)
+        return P(*parts)
+
+    def sharding(self, axes: Sequence[Optional[str]]) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(axes))
+
+    # -- constraint ----------------------------------------------------------
+    def constrain(self, x, axes: Sequence[Optional[str]]):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(axes)))
+
+
+class NullPartitioner(Partitioner):
+    def __init__(self):
+        super().__init__(None, {})
+
+    def constrain(self, x, axes):  # noqa: D401 - no-op
+        return x
+
+    def spec(self, axes):
+        return P()
+
+
+NULL = NullPartitioner()
+
+
+# ---------------------------------------------------------------------------
+# Axis-rule presets (see DESIGN.md §4). `fsdp` = storage sharding of params
+# over the data axis (gathered on use by GSPMD); used for training and for
+# decode of models whose bf16 params exceed HBM under pure TP.
+# ---------------------------------------------------------------------------
+
+def rules_tp(data_axes: MeshAxis = ("data",), model_axis: str = "model",
+             fsdp: bool = False, seq_over_data: bool = False,
+             sp: bool = False) -> Dict[str, MeshAxis]:
+    """Head-level TP (the paper's axis) + DP over batch.
+
+    seq_over_data: shard the KV-cache sequence dim over the data axis
+    (long_500k: batch=1 cannot use data parallelism).
+    sp: Megatron-style sequence parallelism — the *residual stream*
+    ("res_seq") shards its sequence dim over the model axis between blocks
+    (all-gather into TP regions, reduce-scatter out); cuts saved-activation
+    memory by tp and replaces all-reduce with reduce-scatter+all-gather.
+    """
+    rules: Dict[str, MeshAxis] = {
+        "batch": data_axes if not seq_over_data else None,
+        "seq": None,
+        "res_seq": model_axis if sp else None,
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "head_dim": None,
+        "d_model": None,
+        "d_ff": model_axis,
+        "vocab": model_axis,
+        "experts": None,
+        "ssm_heads": model_axis,
+        "ssm_state": None,
+        "cache_seq": (data_axes if isinstance(data_axes, str) else data_axes[-1]) if seq_over_data else None,
+        "img_seq": None,
+        # param-storage-only axes
+        "fsdp": (data_axes if isinstance(data_axes, str) else data_axes[-1]) if fsdp else None,
+    }
+    return rules
+
+
+def rules_zero3(data_axes: MeshAxis) -> Dict[str, MeshAxis]:
+    """Pure ZeRO-3 / FSDP layout: BOTH mesh axes carry data parallelism,
+    no tensor parallelism at all — the right layout for models whose
+    per-layer weights fit one chip (e.g. 8B on 256 chips): it replaces the
+    per-layer TP boundary all-gather/all-reduce of activations with
+    per-layer parameter gathers, ~7x less traffic at train_4k scale
+    (EXPERIMENTS.md §Perf H2-3)."""
+    return {
+        "batch": data_axes, "seq": None, "res_seq": None,
+        "heads": None, "kv_heads": None, "head_dim": None,
+        "d_model": None, "d_ff": None, "vocab": None, "experts": None,
+        "ssm_heads": None, "ssm_state": None, "cache_seq": None,
+        "img_seq": None, "fsdp": data_axes,
+    }
+
+
+def make_partitioner(mesh: Optional[Mesh], *, fsdp: bool = False,
+                     seq_over_data: bool = False, sp: bool = False,
+                     layout: str = "tp") -> Partitioner:
+    if mesh is None:
+        return NullPartitioner()
+    names = mesh.axis_names
+    data_axes: MeshAxis
+    if "pod" in names:
+        data_axes = ("pod", "data")
+    else:
+        data_axes = ("data",)
+    if layout == "zero3":
+        all_axes = tuple(names)  # every axis is data-parallel
+        return Partitioner(mesh, rules_zero3(all_axes))
+    return Partitioner(mesh, rules_tp(data_axes=data_axes, fsdp=fsdp,
+                                      seq_over_data=seq_over_data, sp=sp))

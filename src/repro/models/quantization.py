@@ -1,0 +1,77 @@
+"""Weight-only int8 quantization for serving (beyond-paper §Perf lever).
+
+Symmetric per-last-axis int8: a float weight W becomes
+``{"q8": int8, "sc": f32[last_dim]}`` with W ≈ q8 * sc.  Dequantization
+happens inside the layer-scan body (per-layer slices), so the resident
+footprint is int8 (2x smaller, and for the big decode cells it removes the
+need for FSDP param storage entirely — the per-step all-gather of bf16
+weights disappears from the collective term).
+
+Only matmul weights of the transformer family are quantized (attention
+projections, MLP/MoE experts, embeddings, lm head); norms, biases, gates
+and router weights stay in full precision.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# base (unstacked) rank of each quantizable weight; leading stack axes
+# (the lax.scan layer dim, VLM supergroups) keep per-layer scales
+_BASE_NDIM = {"wq": 3, "wk": 3, "wv": 3, "wo": 3,
+              "tok_embed": 2, "lm_head": 2,
+              "w_gate": 2, "w_up": 2, "w_down": 2}    # 3 inside "moe"
+QUANT_NAMES = tuple(_BASE_NDIM)
+
+
+def is_quantized(leaf) -> bool:
+    return isinstance(leaf, dict) and "q8" in leaf
+
+
+def quantize_weight(w: jnp.ndarray, base_ndim: int) -> dict:
+    """Symmetric int8; scale per (stack dims..., last axis)."""
+    lead = w.ndim - base_ndim
+    red = tuple(range(lead, w.ndim - 1))
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=red)  # (lead..,last)
+    sc = jnp.maximum(absmax, 1e-8) / 127.0
+    sc_b = sc.reshape(sc.shape[:-1] + (1,) * (base_ndim - 1) + sc.shape[-1:])
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / sc_b), -127, 127)
+    return {"q8": q.astype(jnp.int8), "sc": sc.astype(jnp.float32)}
+
+
+def dequantize_weight(leaf, dtype=jnp.bfloat16):
+    if not is_quantized(leaf):
+        return leaf
+    q8, sc = leaf["q8"], leaf["sc"]
+    sc_b = sc.reshape(sc.shape[:-1] + (1,) * (q8.ndim - sc.ndim)
+                      + sc.shape[-1:])
+    return (q8.astype(jnp.float32) * sc_b).astype(dtype)
+
+
+def wt(p: dict, name: str, dtype=jnp.bfloat16):
+    """Weight accessor used by the model code: transparent dequant."""
+    leaf = p[name]
+    if is_quantized(leaf):
+        return dequantize_weight(leaf, dtype)
+    return leaf
+
+
+def quantize_params(params) -> Any:
+    """Quantize every QUANT_NAMES leaf in a param tree."""
+    def visit(tree, parent=""):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k in QUANT_NAMES and hasattr(v, "ndim") and v.ndim >= 2 \
+                        and jnp.issubdtype(v.dtype, jnp.floating):
+                    base = _BASE_NDIM[k]
+                    if parent == "moe" and k.startswith("w_"):
+                        base = 3                      # (E, D, F) experts
+                    out[k] = quantize_weight(v, base)
+                else:
+                    out[k] = visit(v, parent=k)
+            return out
+        return tree
+    return visit(params)

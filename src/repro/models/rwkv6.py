@@ -1,0 +1,234 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay.
+
+Faithful structure (arXiv:2404.05892): token-shift ddlerp with a shared
+low-rank adapter, per-channel data-dependent decay w = exp(-exp(w0+lora)),
+per-head WKV state S in R^{dh x dh}, bonus u, group-norm, silu(g) gating,
+squared-relu channel-mix. Decode state is O(1) — the paper's
+head+KV-cache partitioning unit does not exist (DESIGN.md §5); the WKV
+head-state shards over the model axis instead.
+
+The pure-jnp WKV recurrence here is the oracle; the TPU hot path is the
+chunked Pallas kernel in ``repro.kernels.rwkv6_kernel``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.partitioning import NULL, Partitioner
+
+LORA_R = 32      # shared ddlerp adapter rank
+LORA_W_R = 64    # decay adapter rank
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV recurrence (oracle; f32).
+
+    r,k,v,w: (B,S,H,dh); u: (H,dh); state: (B,H,dh,dh) with S[i,j] indexed
+    [key_dim i, value_dim j]. Returns y (B,S,H,dh), final state.
+    """
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, rkvw):
+        r_t, k_t, v_t, w_t = rkvw
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S)
+        bonus = jnp.einsum("bhi,hi,bhi->bh", r_t, u, k_t)
+        y = y + bonus[..., None] * v_t
+        S = w_t[..., None] * S + k_t[..., None] * v_t[:, :, None, :]
+        return S, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def group_norm_heads(y, scale, bias, eps: float = 1e-5):
+    """Per-head layer norm of (B,S,H,dh); scale/bias (H*dh,)."""
+    B, S, H, dh = y.shape
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    out = (y32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out.reshape(B, S, H * dh) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return out
+
+
+class RWKV6Model:
+    def __init__(self, cfg: ModelConfig, *, tp: int = 1, part: Partitioner = NULL,
+                 remat: str = "none", use_kernel: bool = False):
+        self.cfg = cfg
+        self.part = part
+        self.remat = remat
+        self.use_kernel = use_kernel
+        self.H = cfg.n_heads
+        self.dh = cfg.d_model // cfg.n_heads
+
+    # ------------------------------------------------------------------ init
+    def _init_layer(self, key) -> dict:
+        cfg = self.cfg
+        D, F = cfg.d_model, cfg.d_ff
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 12)
+        p: Dict[str, Any] = {
+            # time mix
+            "mu_x": jnp.full((D,), 0.5, dt),
+            "mix_mu": jnp.full((5, D), 0.5, dt),
+            "lora_A": L.dense_init(ks[0], D, (D, 5 * LORA_R), dt),
+            "lora_B": L.dense_init(ks[1], LORA_R, (5, LORA_R, D), dt) * 0.0,
+            "w0": jnp.full((D,), -6.0, dt),   # exp(-exp(-6)) ~ slow decay
+            "lw_A": L.dense_init(ks[2], D, (D, LORA_W_R), dt),
+            "lw_B": L.dense_init(ks[3], LORA_W_R, (LORA_W_R, D), dt) * 0.0,
+            "wr": L.dense_init(ks[4], D, (D, D), dt),
+            "wk": L.dense_init(ks[5], D, (D, D), dt),
+            "wv": L.dense_init(ks[6], D, (D, D), dt),
+            "wg": L.dense_init(ks[7], D, (D, D), dt),
+            "wo": L.dense_init(ks[8], D, (D, D), dt),
+            "u": jnp.zeros((self.H, self.dh), dt),
+            "gn_scale": jnp.ones((D,), dt),
+            "gn_bias": jnp.zeros((D,), dt),
+            # channel mix
+            "mu_ck": jnp.full((D,), 0.5, dt),
+            "mu_cr": jnp.full((D,), 0.5, dt),
+            "wck": L.dense_init(ks[9], D, (D, F), dt),
+            "wcv": L.dense_init(ks[10], F, (F, D), dt),
+            "wcr": L.dense_init(ks[11], D, (D, D), dt),
+        }
+        for nm in ("ln1", "ln2"):
+            p[nm] = jnp.ones((D,), dt)
+            p[nm + "_b"] = jnp.zeros((D,), dt)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_layers, k_f = jax.random.split(key, 3)
+        lkeys = jax.random.split(k_layers, cfg.n_layers)
+        params = {"layers": jax.vmap(self._init_layer)(lkeys)}
+        params.update(L.init_embed(k_emb, cfg))
+        params["ln_f"] = jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype))
+        params["ln_f_b"] = jnp.zeros((cfg.d_model,), jnp.dtype(cfg.param_dtype))
+        return params
+
+    # ------------------------------------------------------------- time mix
+    def _time_mix(self, p, x, shift_state, wkv_state):
+        """x: (B,S,D); shift_state: (B,D) last token of previous chunk.
+        Returns (out, new_shift, new_wkv)."""
+        cfg, part = self.cfg, self.part
+        B, S, D = x.shape
+        xprev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+        dx = xprev - x
+        x_mix = x + dx * p["mu_x"]
+        lora = jnp.tanh(x_mix @ p["lora_A"]).reshape(B, S, 5, LORA_R)
+        lora = jnp.einsum("bsnr,nrd->bsnd", lora, p["lora_B"])
+        mixed = x[:, :, None, :] + dx[:, :, None, :] * \
+            (p["mix_mu"][None, None] + lora)                    # (B,S,5,D)
+        xw, xk, xv, xr, xg = (mixed[:, :, i] for i in range(5))
+        r = xr @ p["wr"]
+        k = xk @ p["wk"]
+        v = xv @ p["wv"]
+        g = xg @ p["wg"]
+        w_log = p["w0"].astype(jnp.float32) + \
+            (jnp.tanh(xw @ p["lw_A"]) @ p["lw_B"]).astype(jnp.float32)
+        w = jnp.exp(-jnp.exp(w_log))                            # (B,S,D) in (0,1)
+        hsplit = lambda t: t.reshape(B, S, self.H, self.dh)
+        r, k, v, w = hsplit(r), hsplit(k), hsplit(v), hsplit(w)
+        r = part.constrain(r, ("batch", "seq", "ssm_heads", None))
+        k = part.constrain(k, ("batch", "seq", "ssm_heads", None))
+        v = part.constrain(v, ("batch", "seq", "ssm_heads", None))
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+            y, new_wkv = kops.rwkv6(r, k, v, w, p["u"], wkv_state)
+        else:
+            y, new_wkv = wkv_scan(r, k, v, w, p["u"], wkv_state)
+        new_wkv = part.constrain(new_wkv, ("batch", "ssm_heads", None, None))
+        y = group_norm_heads(y, p["gn_scale"], p["gn_bias"])
+        y = (y * jax.nn.silu(g.reshape(B, S, D).astype(jnp.float32))).astype(x.dtype)
+        out = y @ p["wo"]
+        return part.constrain(out, ("batch", "res_seq", "d_model")), x[:, -1, :], new_wkv
+
+    def _channel_mix(self, p, x, shift_state):
+        part = self.part
+        xprev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+        dx = xprev - x
+        xk = x + dx * p["mu_ck"]
+        xr = x + dx * p["mu_cr"]
+        k = jnp.square(jax.nn.relu(xk @ p["wck"]))
+        k = part.constrain(k, ("batch", "seq", "d_ff"))
+        out = jax.nn.sigmoid(xr @ p["wcr"]) * (k @ p["wcv"])
+        return part.constrain(out, ("batch", "res_seq", "d_model")), x[:, -1, :]
+
+    def _layer(self, p, x, state):
+        cfg = self.cfg
+        h = L.layer_norm(x, p["ln1"], p["ln1_b"], cfg.norm_eps)
+        tm, new_st, new_wkv = self._time_mix(p, h, state["shift_t"], state["wkv"])
+        x = x + tm
+        h = L.layer_norm(x, p["ln2"], p["ln2_b"], cfg.norm_eps)
+        cm, new_sc = self._channel_mix(p, h, state["shift_c"])
+        x = x + cm
+        return x, {"shift_t": new_st, "shift_c": new_sc, "wkv": new_wkv}
+
+    # --------------------------------------------------------------- forward
+    def _zero_state(self, batch: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "shift_t": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+            "shift_c": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+            "wkv": jnp.zeros((cfg.n_layers, batch, self.H, self.dh, self.dh),
+                             jnp.float32),
+        }
+
+    def _run_layers(self, params, x, state):
+        def body(x, xs):
+            if self.part.mesh is not None:  # pin per-layer slice (no hoist)
+                flat, td = jax.tree_util.tree_flatten(xs)
+                xs = jax.tree_util.tree_unflatten(
+                    td, jax.lax.optimization_barrier(flat))
+            p, st = xs
+            x, new_st = self._layer(p, x, st)
+            return x, new_st
+        if self.remat != "none":
+            from repro.models.transformer import REMAT_POLICIES
+            body = jax.checkpoint(body, policy=REMAT_POLICIES[self.remat],
+                                  prevent_cse=False)
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+        return x, new_state
+
+    def forward(self, params, tokens, **_):
+        cfg, part = self.cfg, self.part
+        x = L.embed(cfg, params, tokens, part)
+        state = self._zero_state(tokens.shape[0])
+        x, _ = self._run_layers(params, x, state)
+        x = L.layer_norm(x, params["ln_f"], params["ln_f_b"], cfg.norm_eps)
+        return L.unembed(cfg, params, x, part), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"])
+        return L.cross_entropy(logits, batch["labels"], self.part)
+
+    # ---------------------------------------------------------------- decode
+    def init_decode_state(self, params, batch: int, max_seq: int, **_):
+        return {"cache": self._zero_state(batch), "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, state, tokens):
+        cfg, part = self.cfg, self.part
+        x = L.embed(cfg, params, tokens, part)
+        x, new_state = self._run_layers(params, x, state["cache"])
+        x = L.layer_norm(x, params["ln_f"], params["ln_f_b"], cfg.norm_eps)
+        logits = L.unembed(cfg, params, x[:, -1:, :], part)
+        return logits[:, 0], {"cache": new_state,
+                              "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+    def decode_step(self, params, state, tokens):
+        cfg, part = self.cfg, self.part
+        x = L.embed(cfg, params, tokens[:, None], part)
+        x, new_state = self._run_layers(params, x, state["cache"])
+        x = L.layer_norm(x, params["ln_f"], params["ln_f_b"], cfg.norm_eps)
+        logits = L.unembed(cfg, params, x, part)
+        return logits[:, 0], {"cache": new_state, "pos": state["pos"] + 1}

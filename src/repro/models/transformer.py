@@ -1,0 +1,323 @@
+"""Decoder-only transformer LM (dense / MoE / VLM / audio families).
+
+- ``lax.scan`` over stacked layer parameters (compile time & HLO size stay
+  O(1) in depth; required for the 80-layer dry-runs).
+- KV caches are stacked (L, B, T, KvE, dh) pytrees threaded through the layer
+  scan as xs/ys; sliding-window archs (Mixtral) use ring-buffer caches of
+  length ``window``.
+- VLM (llama-3.2-vision): 40 layers = 8 supergroups of [3 self, 1 cross,
+  1 self]; cross-attention K/V are projected once from the (stubbed) image
+  embeddings and live in the decode state.
+- Optional remat (``jax.checkpoint``) around each layer for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_block, moe_block_capacity
+from repro.models.partitioning import NULL, Partitioner
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+class TransformerLM:
+    """Config-driven decoder-only LM."""
+
+    def __init__(self, cfg: ModelConfig, *, tp: int = 1,
+                 part: Partitioner = NULL, remat: str = "none",
+                 capacity_moe: bool = False, capacity_factor: float = 1.25):
+        self.cfg = cfg
+        self.tp = tp
+        self.part = part
+        self.hd = L.head_dims(cfg, tp)
+        self.remat = remat
+        self.capacity_moe = capacity_moe
+        self.capacity_factor = capacity_factor
+        self.is_vlm = cfg.family == "vlm"
+        if self.is_vlm:
+            assert cfg.n_layers % 5 == 0
+            self.n_groups = cfg.n_layers // 5
+        self.window = cfg.sliding_window
+
+    # ------------------------------------------------------------------ init
+    def _init_layer(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        p = {"attn": L.init_attention(ks[0], cfg, self.hd)}
+        dt = jnp.dtype(cfg.param_dtype)
+        for nm in ("ln1", "ln2"):
+            base = L.init_norm(cfg, cfg.d_model, dt)
+            p[nm] = base[""]
+            if "_b" in base:
+                p[nm + "_b"] = base["_b"]
+        if cfg.is_moe:
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        return p
+
+    def _init_cross_layer(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        dt = jnp.dtype(cfg.param_dtype)
+        p = {"attn": L.init_attention(ks[0], cfg, self.hd, cross=True),
+             "mlp": L.init_mlp(ks[1], cfg),
+             "gate_ffn": jnp.zeros((), dt)}
+        for nm in ("ln1", "ln2"):
+            base = L.init_norm(cfg, cfg.d_model, dt)
+            p[nm] = base[""]
+            if "_b" in base:
+                p[nm + "_b"] = base["_b"]
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_layers, k_cross, k_f = jax.random.split(key, 4)
+        if self.is_vlm:
+            sk = jax.random.split(k_layers, 4 * self.n_groups)
+            self_keys = sk.reshape((self.n_groups, 4) + sk.shape[1:])
+            cross_keys = jax.random.split(k_cross, self.n_groups)
+            layers_p = jax.vmap(jax.vmap(self._init_layer))(self_keys)
+            cross_p = jax.vmap(self._init_cross_layer)(cross_keys)
+            params = {"layers": layers_p, "cross_layers": cross_p}
+        else:
+            lkeys = jax.random.split(k_layers, cfg.n_layers)
+            params = {"layers": jax.vmap(self._init_layer)(lkeys)}
+        params.update(L.init_embed(k_emb, cfg))
+        fin = L.init_norm(cfg, cfg.d_model, jnp.dtype(cfg.param_dtype))
+        params["ln_f"] = fin[""]
+        if "_b" in fin:
+            params["ln_f_b"] = fin["_b"]
+        return params
+
+    def _barrier(self, xs):
+        """Pin the per-layer param slice inside the scan body: stops XLA
+        from rewriting gather(slice(params,i)) into slice(gather(params))
+        and hoisting the FSDP all-gather of the whole stacked layer pytree
+        out of the while loop (which materializes all layers' gathered
+        weights at once — DESIGN.md §9 / §Perf)."""
+        if self.part.mesh is None:
+            return xs
+        flat, td = jax.tree_util.tree_flatten(xs)
+        flat = jax.lax.optimization_barrier(flat)
+        return jax.tree_util.tree_unflatten(td, flat)
+
+    # ----------------------------------------------------------------- layer
+    def _layer(self, p: dict, x, positions, cache, cache_pos):
+        cfg, part = self.cfg, self.part
+        h = L.apply_norm(cfg, p, "ln1", x)
+        # explicit SP->TP boundary ON THE BF16 TENSOR: norms run in the
+        # sequence-sharded region (pointwise over D), the all-gather happens
+        # here rather than on an f32 intermediate chosen by GSPMD
+        # (EXPERIMENTS.md §Perf H2-1: halves boundary collective bytes and
+        # avoids SPMD "involuntary full rematerialization" reshards).
+        h = part.constrain(h, ("batch", "seq", "d_model"))
+        attn_out, new_cache = L.self_attention_block(
+            cfg, p["attn"], self.hd, h, positions, part,
+            cache=cache, cache_pos=cache_pos, window=self.window)
+        x = x + attn_out
+        h = L.apply_norm(cfg, p, "ln2", x)
+        h = part.constrain(h, ("batch", "seq", "d_model"))
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.is_moe:
+            if self.capacity_moe:
+                mlp_out, aux = moe_block_capacity(cfg, p["moe"], h, part,
+                                                  self.capacity_factor)
+            else:
+                mlp_out, aux = moe_block(cfg, p["moe"], h, part)
+        else:
+            mlp_out = L.mlp_block(cfg, p["mlp"], h, part)
+        return x + mlp_out, new_cache, aux
+
+    def _cross_layer(self, p: dict, x, img_kv, img_mask):
+        cfg, part = self.cfg, self.part
+        h = L.apply_norm(cfg, p, "ln1", x)
+        attn_out, _ = L.cross_attention_block(cfg, p["attn"], self.hd, h, part,
+                                              kv_cache=img_kv, kv_mask=img_mask)
+        x = x + attn_out
+        h = L.apply_norm(cfg, p, "ln2", x)
+        mlp_out = L.mlp_block(cfg, p["mlp"], h, part)
+        return x + mlp_out * jnp.tanh(p["gate_ffn"]).astype(x.dtype)
+
+    def _project_img_kv(self, params, img_embeds):
+        """vmap K/V projection over the 8 cross layers -> (G,B,I,KvE,dh)."""
+        def proj(p):
+            from repro.models.quantization import wt
+            k = jnp.einsum("bsd,dhk->bshk", img_embeds,
+                           wt(p["attn"], "wk", img_embeds.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", img_embeds,
+                           wt(p["attn"], "wv", img_embeds.dtype))
+            if self.cfg.qkv_bias:
+                k, v = k + p["attn"]["bk"], v + p["attn"]["bv"]
+            if self.hd.rep > 1:
+                k = jnp.repeat(k, self.hd.rep, axis=2)
+                v = jnp.repeat(v, self.hd.rep, axis=2)
+            return {"k": k, "v": v}
+        return jax.vmap(proj)(params["cross_layers"])
+
+    # --------------------------------------------------------------- forward
+    def _run_layers(self, params, x, positions, cache, cache_pos,
+                    img_kv=None, img_mask=None):
+        """Scan over layers. cache: stacked {"k","v"[,"pos"]} or None."""
+        remat_policy = REMAT_POLICIES[self.remat]
+
+        def body(carry, xs):
+            x, aux = carry
+            xs = self._barrier(xs)
+            if self.is_vlm:
+                (self_p, cross_p, kv) = xs
+                for i in range(3):
+                    sp = jax.tree.map(lambda a, i=i: a[i], self_p)
+                    x, _, a = self._layer(sp, x, positions, None, cache_pos)
+                    aux += a
+                x = self._cross_layer(cross_p, x, kv, img_mask)
+                sp = jax.tree.map(lambda a: a[3], self_p)
+                x, _, a = self._layer(sp, x, positions, None, cache_pos)
+                return (x, aux + a), None
+            layer_p, layer_cache = xs
+            x, new_cache, a = self._layer(layer_p, x, positions, layer_cache,
+                                          cache_pos)
+            return (x, aux + a), new_cache
+
+        if self.remat != "none":
+            body = jax.checkpoint(body, policy=remat_policy,
+                                  prevent_cse=False)
+
+        aux0 = jnp.zeros((), jnp.float32)
+        if self.is_vlm:
+            if cache is not None:
+                return self._run_layers_vlm_cached(params, x, positions, cache,
+                                                   cache_pos, img_kv, img_mask,
+                                                   body)
+            xs = (params["layers"], params["cross_layers"], img_kv)
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), xs)
+            return x, None, aux
+        xs = (params["layers"], cache)
+        (x, aux), new_cache = jax.lax.scan(body, (x, aux0), xs)
+        return x, new_cache, aux
+
+    def _run_layers_vlm_cached(self, params, x, positions, cache, cache_pos,
+                               img_kv, img_mask, _body_unused):
+        """VLM with self-attn KV caches: 4 self caches per group."""
+        def body(carry, xs):
+            x, aux = carry
+            xs = self._barrier(xs)
+            self_p, cross_p, kv, self_cache = xs
+            new_caches = []
+            for i in range(3):
+                sp = jax.tree.map(lambda a, i=i: a[i], self_p)
+                lc = jax.tree.map(lambda a, i=i: a[i], self_cache)
+                x, nc, a = self._layer(sp, x, positions, lc, cache_pos)
+                new_caches.append(nc)
+                aux += a
+            x = self._cross_layer(cross_p, x, kv, img_mask)
+            sp = jax.tree.map(lambda a: a[3], self_p)
+            lc = jax.tree.map(lambda a: a[3], self_cache)
+            x, nc, a = self._layer(sp, x, positions, lc, cache_pos)
+            new_caches.append(nc)
+            stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches)
+            return (x, aux + a), stacked
+
+        xs = (params["layers"], params["cross_layers"], img_kv, cache)
+        (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+        return x, new_cache, aux
+
+    def forward(self, params, tokens, *, img_embeds=None, img_mask=None):
+        """Full-sequence forward (training / no-cache prefill). Returns
+        (logits, aux_loss)."""
+        cfg, part = self.cfg, self.part
+        B, S = tokens.shape
+        x = L.embed(cfg, params, tokens, part)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        img_kv = None
+        if self.is_vlm:
+            img_kv = self._project_img_kv(params, img_embeds)
+        x, _, aux = self._run_layers(params, x, positions, None, None,
+                                     img_kv=img_kv, img_mask=img_mask)
+        x = L.apply_norm(cfg, params, "ln_f", x)
+        logits = L.unembed(cfg, params, x, part)
+        return logits, aux
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits, aux = self.forward(params, batch["tokens"],
+                                   img_embeds=batch.get("img_embeds"),
+                                   img_mask=batch.get("img_mask"))
+        ce = L.cross_entropy(logits, batch["labels"], self.part)
+        return ce + 0.01 * aux
+
+    # ----------------------------------------------------------------- cache
+    def cache_len(self, max_seq: int) -> int:
+        return min(max_seq, self.window) if self.window else max_seq
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None) -> dict:
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        T = self.cache_len(max_seq)
+        lead = (self.n_groups, 4) if self.is_vlm else (cfg.n_layers,)
+        shape_k = lead + (batch, T, self.hd.KvE, self.hd.dh)
+        ring = bool(self.window and T == self.window)
+        if cfg.kv_quant and not ring:
+            # int8 KV cache with per-(token, head) scales (§Perf): halves
+            # the resident cache; dequant happens at the attention read.
+            cache = {"k": jnp.zeros(shape_k, jnp.int8),
+                     "v": jnp.zeros(shape_k, jnp.int8),
+                     "k_sc": jnp.zeros(lead + (batch, T, self.hd.KvE),
+                                       jnp.float32),
+                     "v_sc": jnp.zeros(lead + (batch, T, self.hd.KvE),
+                                       jnp.float32)}
+            return cache
+        cache = {"k": jnp.zeros(shape_k, dtype), "v": jnp.zeros(shape_k, dtype)}
+        if ring:
+            cache["pos"] = jnp.full(lead + (T,), jnp.int32(-2**30))
+        return cache
+
+    def init_decode_state(self, params, batch: int, max_seq: int, *,
+                          prompt=None, img_embeds=None, img_mask=None,
+                          dtype=None) -> Dict[str, Any]:
+        state: Dict[str, Any] = {"cache": self.init_cache(batch, max_seq, dtype),
+                                 "pos": jnp.zeros((), jnp.int32)}
+        if self.is_vlm:
+            state["img_kv"] = self._project_img_kv(params, img_embeds)
+            state["img_mask"] = img_mask
+        return state
+
+    def prefill(self, params, state, tokens):
+        """Run the prompt through the model, filling caches. Returns
+        (last-token logits, state)."""
+        cfg, part = self.cfg, self.part
+        B, S = tokens.shape
+        x = L.embed(cfg, params, tokens, part)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, new_cache, _ = self._run_layers(
+            params, x, positions, state["cache"], jnp.zeros((), jnp.int32),
+            img_kv=state.get("img_kv"), img_mask=state.get("img_mask"))
+        x = L.apply_norm(cfg, params, "ln_f", x)
+        logits = L.unembed(cfg, params, x[:, -1:, :], part)
+        return logits[:, 0], dict(state, cache=new_cache,
+                                  pos=jnp.asarray(S, jnp.int32))
+
+    def decode_step(self, params, state, tokens):
+        """One autoregressive step. tokens: (B,) int32. Returns (logits (B,V),
+        new state)."""
+        cfg, part = self.cfg, self.part
+        B = tokens.shape[0]
+        pos = state["pos"]
+        x = L.embed(cfg, params, tokens[:, None], part)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, new_cache, _ = self._run_layers(
+            params, x, positions, state["cache"], pos,
+            img_kv=state.get("img_kv"), img_mask=state.get("img_mask"))
+        x = L.apply_norm(cfg, params, "ln_f", x)
+        logits = L.unembed(cfg, params, x, part)
+        return logits[:, 0], dict(state, cache=new_cache, pos=pos + 1)

@@ -1,0 +1,147 @@
+"""Zamba2 hybrid: Mamba2 backbone + one *shared* attention block.
+
+54 mamba layers organised as 9 supergroups of 6; the shared attention block
+(single weight copy) runs at the top of every supergroup (9 applications).
+Each application has its own KV cache slot (activations differ), so the
+decode cache is (9, B, T, KvE, dh) — head-sharded exactly like a dense
+transformer: the paper's technique applies to the shared block
+(DESIGN.md §5 "partial").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.mamba2 import init_mamba_layer, mamba_block, zero_mamba_state
+from repro.models.partitioning import NULL, Partitioner
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ModelConfig, *, tp: int = 1, part: Partitioner = NULL,
+                 remat: str = "none"):
+        self.cfg = cfg
+        self.part = part
+        self.remat = remat
+        self.hd = L.head_dims(cfg, tp)
+        assert cfg.shared_attn_every > 0
+        assert cfg.n_layers % cfg.shared_attn_every == 0
+        self.n_groups = cfg.n_layers // cfg.shared_attn_every  # 9
+        self.group = cfg.shared_attn_every                     # 6
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_layers, k_attn, k_mlp = jax.random.split(key, 4)
+        lk = jax.random.split(k_layers, cfg.n_layers)
+        lkeys = lk.reshape((self.n_groups, self.group) + lk.shape[1:])
+        layers_p = jax.vmap(jax.vmap(lambda k: init_mamba_layer(k, cfg)))(lkeys)
+        dt = jnp.dtype(cfg.param_dtype)
+        shared = {"attn": L.init_attention(k_attn, cfg, self.hd),
+                  "mlp": L.init_mlp(k_mlp, cfg),
+                  "ln1": jnp.ones((cfg.d_model,), dt),
+                  "ln2": jnp.ones((cfg.d_model,), dt)}
+        params = {"layers": layers_p, "shared": shared}
+        params.update(L.init_embed(k_emb, cfg))
+        params["ln_f"] = jnp.ones((cfg.d_model,), dt)
+        return params
+
+    # ----------------------------------------------------------------- body
+    def _shared_attn(self, params, x, positions, cache, cache_pos):
+        cfg, part = self.cfg, self.part
+        p = params["shared"]
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn_out, new_cache = L.self_attention_block(
+            cfg, p["attn"], self.hd, h, positions, part,
+            cache=cache, cache_pos=cache_pos)
+        x = x + attn_out
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + L.mlp_block(cfg, p["mlp"], h, part), new_cache
+
+    def _run(self, params, x, positions, state, cache_pos):
+        """state: {"attn_cache": stacked(G,...) or None, "mamba": stacked(G,g,...)}"""
+        def group_body(carry, xs):
+            x = carry
+            if self.part.mesh is not None:  # pin per-group slice (no hoist)
+                flat, td = jax.tree_util.tree_flatten(xs)
+                xs = jax.tree_util.tree_unflatten(
+                    td, jax.lax.optimization_barrier(flat))
+            mamba_p, attn_cache, mamba_state = xs
+            x, new_attn_cache = self._shared_attn(params, x, positions,
+                                                  attn_cache, cache_pos)
+
+            def inner(x, ixs):
+                lp, lst = ixs
+                out, new_lst = mamba_block(self.cfg, lp, x, lst, self.part)
+                return x + out, new_lst
+
+            x, new_mamba = jax.lax.scan(inner, x, (mamba_p, mamba_state))
+            return x, (new_attn_cache, new_mamba)
+
+        if self.remat != "none":
+            from repro.models.transformer import REMAT_POLICIES
+            group_body = jax.checkpoint(group_body,
+                                        policy=REMAT_POLICIES[self.remat],
+                                        prevent_cse=False)
+        xs = (params["layers"], state["attn_cache"], state["mamba"])
+        x, (new_cache, new_mamba) = jax.lax.scan(group_body, x, xs)
+        return x, {"attn_cache": new_cache, "mamba": new_mamba}
+
+    def _zero_state(self, batch: int, max_seq: int, with_cache: bool):
+        cfg = self.cfg
+        mamba = zero_mamba_state(cfg, batch, lead=(self.n_groups, self.group))
+        attn_cache = None
+        if with_cache:
+            attn_cache = {
+                "k": jnp.zeros((self.n_groups, batch, max_seq, self.hd.KvE,
+                                self.hd.dh), jnp.dtype(cfg.dtype)),
+                "v": jnp.zeros((self.n_groups, batch, max_seq, self.hd.KvE,
+                                self.hd.dh), jnp.dtype(cfg.dtype)),
+            }
+        return {"attn_cache": attn_cache, "mamba": mamba}
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, tokens, **_):
+        cfg, part = self.cfg, self.part
+        B, S = tokens.shape
+        x = L.embed(cfg, params, tokens, part)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        state = self._zero_state(B, S, with_cache=False)
+        x, _ = self._run(params, x, positions, state, None)
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return L.unembed(cfg, params, x, part), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"])
+        return L.cross_entropy(logits, batch["labels"], self.part)
+
+    # ---------------------------------------------------------------- decode
+    def init_decode_state(self, params, batch: int, max_seq: int, **_):
+        return {"cache": self._zero_state(batch, max_seq, with_cache=True),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, state, tokens):
+        cfg, part = self.cfg, self.part
+        B, S = tokens.shape
+        x = L.embed(cfg, params, tokens, part)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, new_state = self._run(params, x, positions, state["cache"],
+                                 jnp.zeros((), jnp.int32))
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(cfg, params, x[:, -1:, :], part)
+        return logits[:, 0], {"cache": new_state,
+                              "pos": jnp.asarray(S, jnp.int32)}
+
+    def decode_step(self, params, state, tokens):
+        cfg, part = self.cfg, self.part
+        B = tokens.shape[0]
+        pos = state["pos"]
+        x = L.embed(cfg, params, tokens[:, None], part)
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, new_state = self._run(params, x, positions, state["cache"], pos)
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(cfg, params, x, part)
+        return logits[:, 0], {"cache": new_state, "pos": pos + 1}

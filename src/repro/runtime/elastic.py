@@ -1,0 +1,56 @@
+"""Elastic scaling: rebuild the mesh on a changed device set and re-shard
+state from the last checkpoint.
+
+A checkpoint written on one mesh restores onto any other (the checkpointer
+stores unsharded host arrays and device_puts with the *new* shardings), so
+shrink/grow is: detect -> choose new mesh shape -> rebuild shardings ->
+restore.  The controller then re-runs Algorithm 1 on the new slot set —
+the paper's migration machinery provides the placement on the resized
+cluster for free.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def best_mesh_shape(n_devices: int, *, prefer_model: int = 16
+                    ) -> Tuple[int, int]:
+    """(data, model) for an arbitrary surviving device count: the largest
+    power-of-two model degree <= prefer_model that divides n_devices
+    (head-level TP needs uniform shards and our head counts divide powers
+    of two), rest to data."""
+    model = 1
+    while (model * 2 <= min(prefer_model, n_devices)
+           and n_devices % (model * 2) == 0):
+        model *= 2
+    return n_devices // model, model
+
+
+class ElasticMesh:
+    def __init__(self, devices=None, prefer_model: int = 16):
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.prefer_model = prefer_model
+        self.mesh = self._build()
+
+    def _build(self):
+        n = len(self.devices)
+        data, model = best_mesh_shape(n, prefer_model=self.prefer_model)
+        import numpy as np
+        dev_array = np.array(self.devices[:data * model]).reshape(data, model)
+        from jax.sharding import Mesh
+        return Mesh(dev_array, ("data", "model"))
+
+    def resize(self, devices) -> "ElasticMesh":
+        return ElasticMesh(devices, self.prefer_model)
+
+
+def elastic_restore(ckpt: Checkpointer, step: int, like_tree,
+                    make_shardings, mesh):
+    """Restore a checkpoint onto a (possibly different) mesh.
+    ``make_shardings(mesh)`` builds the sharding pytree for that mesh."""
+    return ckpt.restore(step, like_tree, shardings=make_shardings(mesh))

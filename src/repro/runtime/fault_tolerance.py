@@ -1,0 +1,108 @@
+"""Fault-tolerance runtime: heartbeat/step-time telemetry, straggler
+detection, failure handling.
+
+The central systems claim (DESIGN.md §9): the paper's resource-aware
+algorithm doubles as the TPU straggler/memory-pressure policy.  Observed
+per-slot step times are converted into the C_j(τ) availability estimates
+Algorithm 1 consumes; slots flagged as stragglers get their head-shards
+migrated away exactly like an overloaded edge device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SlotTelemetry:
+    step_times: Deque[float]
+    last_heartbeat: float
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    """Tracks per-slot liveness + step-time EWMA; estimates effective
+    compute availability for the controller."""
+
+    def __init__(self, n_slots: int, *, window: int = 16,
+                 straggler_factor: float = 1.5,
+                 heartbeat_timeout: float = 60.0):
+        self.slots: Dict[int, SlotTelemetry] = {
+            j: SlotTelemetry(deque(maxlen=window), time.monotonic())
+            for j in range(n_slots)}
+        self.straggler_factor = straggler_factor
+        self.heartbeat_timeout = heartbeat_timeout
+
+    def record_step(self, slot: int, seconds: float):
+        t = self.slots[slot]
+        t.step_times.append(seconds)
+        t.last_heartbeat = time.monotonic()
+        t.alive = True
+
+    def record_heartbeat(self, slot: int):
+        self.slots[slot].last_heartbeat = time.monotonic()
+
+    # ------------------------------------------------------------- queries
+    def median_step(self) -> float:
+        times = [np.mean(t.step_times) for t in self.slots.values()
+                 if t.step_times]
+        return float(np.median(times)) if times else 0.0
+
+    def stragglers(self) -> List[int]:
+        med = self.median_step()
+        if med <= 0:
+            return []
+        return [j for j, t in self.slots.items()
+                if t.step_times and np.mean(t.step_times)
+                > self.straggler_factor * med]
+
+    def dead(self) -> List[int]:
+        now = time.monotonic()
+        return [j for j, t in self.slots.items()
+                if now - t.last_heartbeat > self.heartbeat_timeout]
+
+    def availability(self, peak_flops: float) -> np.ndarray:
+        """C_j(τ) estimates for Algorithm 1: peak scaled by the inverse of
+        the slot's slowdown relative to the median step time."""
+        med = self.median_step()
+        out = np.full(len(self.slots), peak_flops)
+        if med <= 0:
+            return out
+        for j, t in self.slots.items():
+            if not t.alive:
+                out[j] = 0.0
+            elif t.step_times:
+                out[j] = peak_flops * min(1.0, med / float(np.mean(t.step_times)))
+        return out
+
+    def mark_failed(self, slot: int):
+        self.slots[slot].alive = False
+
+
+class RestartPolicy:
+    """Checkpoint-restart orchestration: on failure, roll back to the last
+    committed step and re-enter the train loop; bounded retries with
+    exponential backoff (production default 3 retries)."""
+
+    def __init__(self, checkpointer, *, max_retries: int = 3,
+                 backoff_s: float = 5.0):
+        self.ckpt = checkpointer
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.failures = 0
+
+    def run(self, train_fn: Callable[[Optional[int]], None]):
+        """train_fn(resume_step) runs until completion or raises."""
+        while True:
+            try:
+                train_fn(self.ckpt.latest_step())
+                return
+            except Exception:  # noqa: BLE001 — any worker fault
+                self.failures += 1
+                if self.failures > self.max_retries:
+                    raise
+                time.sleep(self.backoff_s * 2 ** (self.failures - 1))

@@ -1,0 +1,180 @@
+"""Batched serving engine with the paper's controller in the loop.
+
+Wave-based static batching: up to ``n_slots`` requests with equal-length
+prompts form a wave; the wave prefills as one batch, then decodes in
+lock-step until every request hits its token budget.  Every λ decode steps
+the IntervalController observes step-time telemetry + cache growth,
+re-runs Algorithm 1, and applies any head migrations to the cache in the
+inter-step gap — the paper's per-interval migration loop as a production
+serving feature (straggler and memory-pressure mitigation; DESIGN.md §9).
+
+On a single CPU host this runs unsharded (NULL partitioner) and the
+controller drives a *simulated* slot network — the same code path the TPU
+deployment uses with mesh slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.blocks import CostModel
+from repro.core.controller import ControllerConfig, IntervalController
+from repro.core.network import DeviceNetwork
+from repro.models.api import build_model
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (L0,) int32
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, *, n_slots: int = 4,
+                 max_seq: int = 512, lam: int = 16, seed: int = 0,
+                 net: Optional[DeviceNetwork] = None, cost_cfg=None,
+                 part=None, tp: int = 1, greedy: bool = True):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        from repro.models.partitioning import NULL
+        self.model = build_model(cfg, tp=tp, part=part or NULL)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._rid = 0
+        # controller wiring (the paper's technique in the serving loop).
+        # The controller's cost model can use the FULL production dims
+        # (cost_cfg) while a reduced model serves on CPU — the placement
+        # problem is the production one either way.
+        n_dev = net.n_devices if net is not None else max(tp, 4)
+        self.net = net or DeviceNetwork.sample(n_dev, seed=seed + 1)
+        hd = getattr(self.model, "hd", None)
+        n_heads = (hd.Hp if hd and hd.Hp else max(cfg.n_heads, 1))
+        heads_per_slot = max(1, n_heads // self.net.n_devices)
+        ccfg = cost_cfg or cfg
+        cost = CostModel(d_model=ccfg.d_model, n_heads=max(cfg.n_heads, 1),
+                         L0=8, n_layers=ccfg.n_layers, lam=lam,
+                         compute_mode="incremental")
+        self.controller = IntervalController(
+            max(cfg.n_heads, 1), cost, self.net,
+            ControllerConfig(lam=lam, heads_per_slot=heads_per_slot))
+        self.monitor = HeartbeatMonitor(self.net.n_devices)
+        self.lam = lam
+        self.decode_steps = 0
+        self.migration_log: List[dict] = []
+        self._decode_jit = jax.jit(self.model.decode_step)
+        self._prefill_jit = jax.jit(self.model.prefill)
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        req = Request(self._rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, t_submit=time.monotonic())
+        self._rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def _next_wave(self) -> List[Request]:
+        """Up to n_slots queued requests with equal prompt length."""
+        if not self.queue:
+            return []
+        L0 = len(self.queue[0].prompt)
+        wave = [r for r in self.queue if len(r.prompt) == L0][:self.n_slots]
+        for r in wave:
+            self.queue.remove(r)
+        return wave
+
+    # ----------------------------------------------------------------- decode
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        key = jax.random.PRNGKey(self.decode_steps)
+        return np.asarray(jax.random.categorical(key, logits))
+
+    def _run_wave(self, wave: List[Request], max_steps: int):
+        B = self.n_slots
+        L0 = len(wave[0].prompt)
+        prompts = np.zeros((B, L0), np.int32)
+        for i, r in enumerate(wave):
+            prompts[i] = r.prompt
+        state = self.model.init_decode_state(self.params, B, self.max_seq)
+        logits, state = self._prefill_jit(self.params, state,
+                                          jnp.asarray(prompts))
+        for r in wave:
+            r.t_first = time.monotonic()
+        active = {i: r for i, r in enumerate(wave)}
+        nxt = self._sample(logits)
+        while active and self.decode_steps < max_steps:
+            for i, r in list(active.items()):
+                r.out_tokens.append(int(nxt[i]))
+                if (len(r.out_tokens) >= r.max_new_tokens
+                        or L0 + len(r.out_tokens) >= self.max_seq - 1):
+                    r.done = True
+                    r.t_done = time.monotonic()
+                    self.finished.append(r)
+                    del active[i]
+            if not active:
+                break
+            t0 = time.monotonic()
+            logits, state = self._decode_jit(self.params, state,
+                                             jnp.asarray(nxt))
+            jax.block_until_ready(logits)
+            dt = time.monotonic() - t0
+            nxt = self._sample(logits)
+            self.decode_steps += 1
+            for j in range(self.net.n_devices):
+                self.monitor.record_step(j, dt)
+            if self.decode_steps % self.lam == 0:
+                state = self._interval(state)
+
+    def _interval(self, state):
+        """The paper's controller interval: observe -> Algorithm 1 ->
+        migrate head shards in the decode gap."""
+        self.net.step_background_load()
+        self.controller.observe(compute_avail=self.net.compute_avail)
+        plan = self.controller.step_interval()
+        hd = getattr(self.model, "hd", None)
+        mha = hd is not None and hd.Hp and hd.KvE == hd.Hp and hd.rep == 1
+        if plan["migrations"] and mha:
+            # physical migration: permute weights AND cache by the same head
+            # permutation — model function is invariant, placement changes
+            # (placement_bridge.permute_model_heads). GQA archs migrate at
+            # group granularity; this demo engine logs those without moving.
+            cache = state.get("cache")
+            if isinstance(cache, dict) and "k" in cache \
+                    and cache["k"].ndim >= 4:
+                prev = plan["prev_perm"]
+                old_pos = {int(h): i for i, h in enumerate(prev)}
+                rel = np.array([old_pos[int(h)] for h in plan["perm"]])
+                from repro.core.placement_bridge import permute_model_heads
+                self.params = permute_model_heads(self.params, rel)
+                k2, v2 = (jnp.take(cache["k"], jnp.asarray(rel), axis=-2),
+                          jnp.take(cache["v"], jnp.asarray(rel), axis=-2))
+                state = dict(state, cache=dict(cache, k=k2, v=v2))
+        self.migration_log.append({
+            "step": self.decode_steps,
+            "n_migrations": len(plan["migrations"]),
+            "d_mig_est": plan["d_mig_est"]})
+        return state
+
+    def run(self, max_steps: int = 10_000):
+        while self.queue and self.decode_steps < max_steps:
+            wave = self._next_wave()
+            if not wave:
+                break
+            self._run_wave(wave, max_steps)
+        return self.finished

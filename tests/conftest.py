@@ -1,0 +1,35 @@
+"""Shared test fixtures. NOTE: no XLA device-count override here — smoke
+tests and benches must see 1 CPU device (the 512-device override belongs
+exclusively to launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+
+
+def reduced_config(name: str, **over):
+    """Family-preserving reduced config for CPU smoke tests."""
+    cfg = get_config(name)
+    base = dict(d_model=64, d_ff=128, vocab_size=97,
+                dtype="float32", param_dtype="float32")
+    if cfg.n_heads:
+        base.update(n_heads=4, d_head=16,
+                    n_kv_heads=min(4, cfg.n_kv_heads or 4))
+    if cfg.family == "vlm":
+        base.update(n_layers=5)
+    elif cfg.family == "hybrid":
+        base.update(n_layers=4, shared_attn_every=2)
+    elif cfg.family == "ssm":
+        base.update(n_layers=2, n_heads=4, d_head=16)
+    else:
+        base.update(n_layers=2)
+    if cfg.is_moe:
+        base.update(n_experts=4, sliding_window=8)
+    base.update(over)
+    return cfg.with_overrides(**base)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps
+per the assignment — every kernel allclose against ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_kernel import rwkv6_chunked
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KvE,S,dh,bq,bk", [
+    (1, 4, 4, 128, 64, 64, 64),     # MHA
+    (2, 8, 2, 256, 64, 128, 64),    # GQA 4:1
+    (1, 4, 1, 128, 128, 64, 128),   # MQA, dh=128
+    (2, 2, 2, 192, 32, 64, 96),     # uneven blocks
+])
+def test_flash_attention_causal(dtype, B, H, KvE, S, dh, bq, bk):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh), dtype)
+    k = jax.random.normal(ks[1], (B, KvE, S, dh), dtype)
+    v = jax.random.normal(ks[2], (B, KvE, S, dh), dtype)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_attention_sliding_window(window):
+    B, H, KvE, S, dh = 2, 4, 2, 256, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh))
+    k = jax.random.normal(ks[1], (B, KvE, S, dh))
+    v = jax.random.normal(ks[2], (B, KvE, S, dh))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    B, H, KvE, S, dh = 1, 2, 2, 128, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, dh))
+    k = jax.random.normal(ks[1], (B, KvE, S, dh))
+    v = jax.random.normal(ks[2], (B, KvE, S, dh))
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KvE,T,dh,bk", [
+    (2, 8, 4, 256, 64, 64),
+    (3, 4, 1, 128, 128, 128),
+    (1, 2, 2, 512, 32, 256),
+])
+def test_decode_attention(dtype, B, H, KvE, T, dh, bk):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, KvE, T, dh), dtype)
+    v = jax.random.normal(ks[2], (B, KvE, T, dh), dtype)
+    lens = jax.random.randint(ks[3], (B,), 1, T + 1)
+    out = decode_attention(q, k, v, lens, bk=bk, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_decode_attention_skips_invalid_blocks():
+    """Length-masked region must not contribute even if it contains junk."""
+    B, H, KvE, T, dh = 1, 2, 2, 256, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, KvE, T, dh))
+    v = jax.random.normal(ks[2], (B, KvE, T, dh))
+    k = k.at[:, :, 100:].set(1e9)  # poison the invalid tail
+    v = v.at[:, :, 100:].set(1e9)
+    lens = jnp.array([100])
+    out = decode_attention(q, k, v, lens, bk=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,S,dh,chunk", [
+    (2, 3, 64, 16, 16),
+    (1, 2, 128, 32, 32),
+    (2, 1, 96, 64, 96),
+])
+def test_rwkv6_kernel(B, H, S, dh, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = 0.5 * jax.random.normal(ks[0], (B, H, S, dh))
+    k = 0.5 * jax.random.normal(ks[1], (B, H, S, dh))
+    v = 0.5 * jax.random.normal(ks[2], (B, H, S, dh))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, H, S, dh))) * 0.5 + 0.45
+    u = 0.1 * jax.random.normal(ks[4], (H, dh))
+    s0 = 0.1 * jax.random.normal(KEY, (B, H, dh, dh))
+    y, sT = rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    y_ref, sT_ref = ref.rwkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rwkv6_kernel_state_chaining():
+    """Two chunked calls == one long call (state carry correctness)."""
+    B, H, S, dh = 1, 2, 64, 16
+    ks = jax.random.split(KEY, 5)
+    mk = lambda i: 0.4 * jax.random.normal(ks[i], (B, H, S, dh))
+    r, k, v = mk(0), mk(1), mk(2)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, H, S, dh))) * 0.4 + 0.55
+    u = 0.1 * jax.random.normal(ks[4], (H, dh))
+    s0 = jnp.zeros((B, H, dh, dh))
+    y_full, s_full = rwkv6_chunked(r, k, v, w, u, s0, chunk=32, interpret=True)
+    half = S // 2
+    y1, s1 = rwkv6_chunked(r[:, :, :half], k[:, :, :half], v[:, :, :half],
+                           w[:, :, :half], u, s0, chunk=32, interpret=True)
+    y2, s2 = rwkv6_chunked(r[:, :, half:], k[:, :, half:], v[:, :, half:],
+                           w[:, :, half:], u, s1, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=2)),
+                               np.asarray(y_full), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_model_rwkv_with_kernel_matches_scan(rng_key):
+    """RWKV6Model(use_kernel=True) == pure-scan model output."""
+    from tests.conftest import reduced_config
+    from repro.models.api import build_model
+    cfg = reduced_config("rwkv6-7b")
+    m_scan = build_model(cfg)
+    m_kern = build_model(cfg, use_kernel=True)
+    params = m_scan.init(rng_key)
+    toks = jax.random.randint(rng_key, (2, 32), 0, cfg.vocab_size)
+    l1, _ = m_scan.forward(params, toks)
+    l2, _ = m_kern.forward(params, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,H,KvE,T,dh,bk", [
+    (2, 4, 2, 256, 64, 64),
+    (1, 4, 4, 128, 32, 128),
+])
+def test_decode_attention_int8_fused(B, H, KvE, T, dh, bk):
+    """Fused int8-KV flash-decode == dequantized-cache oracle (and within
+    quantization error of the fp32 cache)."""
+    from repro.kernels.decode_attention import decode_attention_int8
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, KvE, T, dh))
+    v = jax.random.normal(ks[2], (B, KvE, T, dh))
+
+    def q8(t):
+        sc = jnp.maximum(jnp.abs(t).max(-1), 1e-8) / 127.0
+        qq = jnp.clip(jnp.round(t / sc[..., None]), -127, 127)
+        return qq.astype(jnp.int8), sc
+
+    kq, ksc = q8(k)
+    vq, vsc = q8(v)
+    lens = jax.random.randint(ks[3], (B,), 1, T + 1)
+    out = decode_attention_int8(q, kq, ksc, vq, vsc, lens, bk=bk,
+                                interpret=True)
+    kd = kq.astype(jnp.float32) * ksc[..., None]
+    vd = vq.astype(jnp.float32) * vsc[..., None]
+    want = ref.decode_attention_ref(q, kd, vd, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    full = ref.decode_attention_ref(q, k, v, lens)
+    assert float(jnp.abs(out - full).max()) < 0.05  # int8 quantization error

@@ -1,0 +1,179 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DeviceNetwork, inference_delay, memory_usage, \
+    migration_delay, total_delay
+from repro.core.algorithm import ResourceAwareAssigner
+from repro.core.blocks import CostModel, make_blocks
+from repro.core.placement_bridge import migration_pairs, placement_to_perm
+from repro.launch.hlo_analysis import _shape_bytes, collective_bytes
+from repro.models import layers as L
+from repro.models.partitioning import NULL
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------- cost model
+@given(tau=st.integers(1, 5000), d_model=st.sampled_from([512, 2048, 4096]),
+       h=st.sampled_from([4, 8, 32]), b=st.sampled_from([1, 2, 4]))
+@settings(**SETTINGS)
+def test_costs_positive_and_monotone(tau, d_model, h, b):
+    cost = CostModel(d_model=d_model, n_heads=h, bytes_per_param=b)
+    for bl in make_blocks(h):
+        assert cost.memory(bl, tau) > 0
+        assert cost.compute(bl, tau) > 0
+        assert cost.memory(bl, tau + 1) > cost.memory(bl, tau)
+
+
+@given(seed=st.integers(0, 10_000), n_dev=st.integers(2, 6))
+@settings(**SETTINGS)
+def test_migration_delay_triangle(seed, n_dev):
+    """No-move placements cost zero; any move costs > 0."""
+    blocks = make_blocks(4)
+    cost = CostModel(d_model=512, n_heads=4)
+    net = DeviceNetwork.sample(n_dev, seed=seed)
+    rng = np.random.default_rng(seed)
+    p = rng.integers(0, n_dev, len(blocks))
+    assert migration_delay(p, p, blocks, cost, net, 2) == 0.0
+    q = p.copy()
+    q[0] = (q[0] + 1) % n_dev
+    assert migration_delay(p, q, blocks, cost, net, 2) > 0.0
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_memory_usage_conserved(seed):
+    """Sum of per-device memory == sum of block footprints, placement-free."""
+    blocks = make_blocks(6)
+    cost = CostModel(d_model=512, n_heads=6)
+    net = DeviceNetwork.sample(4, seed=seed)
+    rng = np.random.default_rng(seed)
+    p1 = rng.integers(0, 4, len(blocks))
+    p2 = rng.integers(0, 4, len(blocks))
+    assert abs(memory_usage(p1, blocks, cost, net, 7).sum()
+               - memory_usage(p2, blocks, cost, net, 7).sum()) < 1e-6
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_faster_devices_never_hurt(seed):
+    """Uniformly doubling compute cannot increase the inference delay."""
+    blocks = make_blocks(4)
+    cost = CostModel(d_model=512, n_heads=4)
+    net = DeviceNetwork.sample(3, seed=seed)
+    rng = np.random.default_rng(seed)
+    p = rng.integers(0, 3, len(blocks))
+    d1 = inference_delay(p, blocks, cost, net, 3)
+    net2 = net.copy()
+    net2.compute_avail = net2.compute_avail * 2
+    assert inference_delay(p, blocks, cost, net2, 3) <= d1 + 1e-12
+
+
+# -------------------------------------------------------------- algorithm
+@given(seed=st.integers(0, 2_000), n_heads=st.sampled_from([2, 4, 8]),
+       n_dev=st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_algorithm_output_is_valid_placement(seed, n_heads, n_dev):
+    blocks = make_blocks(n_heads)
+    cost = CostModel(d_model=512, n_heads=n_heads, n_layers=8,
+                     compute_mode="incremental")
+    net = DeviceNetwork.sample(n_dev, seed=seed)
+    assigner = ResourceAwareAssigner(blocks, cost, deadline=1.0)
+    place, stats = assigner.assign(net, 1, None)
+    if place is not None:
+        assert place.shape == (len(blocks),)
+        assert ((0 <= place) & (place < n_dev)).all()
+        # every block on exactly one device by construction; memory holds
+        assert memory_usage(place, blocks, cost, net, 1).max() \
+            <= net.mem_capacity.max() + 1e-6
+
+
+# ------------------------------------------------------ placement bridge
+@given(seed=st.integers(0, 10_000), n_heads=st.sampled_from([4, 8, 16]),
+       n_slots=st.sampled_from([2, 4]))
+@settings(**SETTINGS)
+def test_placement_to_perm_is_permutation(seed, n_heads, n_slots):
+    heads_per_slot = n_heads // n_slots
+    blocks = make_blocks(n_heads)
+    rng = np.random.default_rng(seed)
+    place = rng.integers(0, n_slots, len(blocks))
+    perm = placement_to_perm(place, blocks, n_slots, heads_per_slot)
+    assert sorted(perm.tolist()) == list(range(n_heads))
+    # idempotence: same placement -> no migrations
+    assert migration_pairs(perm, perm, heads_per_slot) == []
+
+
+# ------------------------------------------------------------ HLO parsing
+@given(dt=st.sampled_from(["bf16", "f32", "s32", "pred"]),
+       dims=st.lists(st.integers(1, 64), min_size=0, max_size=4))
+@settings(**SETTINGS)
+def test_shape_bytes(dt, dims):
+    n = int(np.prod(dims)) if dims else 1
+    per = {"bf16": 2, "f32": 4, "s32": 4, "pred": 1}[dt]
+    assert _shape_bytes(dt, ",".join(map(str, dims))) == n * per
+
+
+def test_collective_parser_trip_counts():
+    hlo = """
+cond.1 (p: (s32[])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%p, %c), direction=LT
+}
+body.1 (p: (s32[])) -> (s32[]) {
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[]) tuple(%i)
+}
+ENTRY main (a: f32[]) -> f32[] {
+  %w = (s32[]) while(%init), condition=%cond.1, body=%body.1
+  %ag = bf16[64,2]{1,0} all-gather(%y), dimensions={0}
+  ROOT %r = f32[] constant(0)
+}
+"""
+    d = collective_bytes(hlo)
+    assert d["all-reduce"] == 7 * 128 * 4     # trip count applied
+    assert d["all-gather"] == 64 * 2 * 2
+
+
+# ------------------------------------------------------------ model layers
+@given(seed=st.integers(0, 1000), window=st.sampled_from([0, 7, 64]))
+@settings(max_examples=10, deadline=None)
+def test_chunked_equals_vanilla_attention(seed, window):
+    key = jax.random.PRNGKey(seed)
+    B, S, Hp, KvE, dh = 1, 64, 2, 2, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hp, dh))
+    k = jax.random.normal(ks[1], (B, S, KvE, dh))
+    v = jax.random.normal(ks[2], (B, S, KvE, dh))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o1 = L.chunked_attention(q, k, v, pos, pos, NULL, causal=True,
+                             window=window, chunk=16)
+    o2 = L.attention_scores(q, k, v, L.causal_mask(pos, pos, window), NULL)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-5, rtol=1e-5)
+
+
+@given(frac=st.sampled_from([0.5, 1.0]),
+       theta=st.sampled_from([1e4, 5e5]))
+@settings(max_examples=10, deadline=None)
+def test_rope_preserves_norm_and_relativity(frac, theta):
+    """RoPE is an isometry on the rotated sub-dim, and relative: shifting
+    q and k positions together leaves the attention logits unchanged."""
+    key = jax.random.PRNGKey(0)
+    B, S, H, dh = 1, 8, 2, 16
+    x = jax.random.normal(key, (B, S, H, dh))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    y = L.apply_rope(x, pos, theta, frac)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, dh))
+    def logits(off):
+        qp = L.apply_rope(q, pos + off, theta, frac)
+        kp = L.apply_rope(k, pos + off, theta, frac)
+        return jnp.einsum("bshd,bthd->bhst", qp, kp)
+    np.testing.assert_allclose(np.asarray(logits(0)), np.asarray(logits(13)),
+                               atol=1e-3, rtol=1e-3)

@@ -1,0 +1,79 @@
+"""int8 weight-only + int8 KV-cache serving (beyond-paper §Perf levers)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.api import build_model
+from repro.models.quantization import (dequantize_weight, quantize_params,
+                                       quantize_weight)
+from tests.conftest import reduced_config
+
+
+def test_quantize_roundtrip_error_bound(rng_key):
+    w = jax.random.normal(rng_key, (4, 64, 8, 16)) * 0.3   # stacked (L,...)
+    q = quantize_weight(w, base_ndim=3)
+    assert q["q8"].dtype == jnp.int8
+    assert q["sc"].shape == (4, 16)                        # per (layer, last)
+    wd = dequantize_weight(q, jnp.float32)
+    rel = float(jnp.abs(w - wd).max() / jnp.abs(w).max())
+    assert rel < 0.02
+
+
+@pytest.mark.parametrize("arch,tol", [("llama3-8b", 0.08),
+                                      ("musicgen-large", 0.08)])
+def test_int8_weights_close_to_float(arch, tol, rng_key):
+    cfg = reduced_config(arch)
+    m = build_model(cfg)
+    params = m.init(rng_key)
+    qp = quantize_params(params)
+    toks = jax.random.randint(rng_key, (2, 16), 0, cfg.vocab_size)
+    lf, _ = m.forward(params, toks)
+    lq, _ = m.forward(qp, toks)
+    rel = float(jnp.abs(lf - lq).max() / (jnp.abs(lf).max() + 1e-9))
+    assert rel < tol, rel
+
+
+def test_int8_weights_moe_top1_agreement(rng_key):
+    """Router decisions may flip under weight perturbation; gate on top-1
+    agreement instead of logit error."""
+    cfg = reduced_config("mixtral-8x7b")
+    m = build_model(cfg)
+    params = m.init(rng_key)
+    qp = quantize_params(params)
+    toks = jax.random.randint(rng_key, (2, 32), 0, cfg.vocab_size)
+    lf, _ = m.forward(params, toks)
+    lq, _ = m.forward(qp, toks)
+    agree = float((jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).mean())
+    assert agree > 0.9, agree
+
+
+def test_int8_kv_cache_decode(rng_key):
+    cfg = reduced_config("llama3-8b").with_overrides(kv_quant=True)
+    m = build_model(cfg)
+    params = m.init(rng_key)
+    B, S, G = 2, 9, 4
+    toks = jax.random.randint(rng_key, (B, S + G), 0, cfg.vocab_size)
+    full, _ = m.forward(params, toks)
+    st = m.init_decode_state(params, B, S + G)
+    assert st["cache"]["k"].dtype == jnp.int8
+    assert "k_sc" in st["cache"]
+    lg, st = m.prefill(params, st, toks[:, :S])
+    errs = [float(jnp.abs(lg - full[:, S - 1]).max())]
+    for g in range(G):
+        lg, st = m.decode_step(params, st, toks[:, S + g])
+        errs.append(float(jnp.abs(lg - full[:, S + g]).max()))
+    assert max(errs) < 0.05, errs
+
+
+def test_quantized_decode_state_and_steps_jit(rng_key):
+    """Quantized params + int8 cache through jitted prefill/decode."""
+    cfg = reduced_config("llama3-8b").with_overrides(kv_quant=True)
+    m = build_model(cfg)
+    qp = quantize_params(m.init(rng_key))
+    toks = jax.random.randint(rng_key, (2, 12), 0, cfg.vocab_size)
+    st = m.init_decode_state(qp, 2, 24)
+    lg, st = jax.jit(m.prefill)(qp, st, toks)
+    lg2, st = jax.jit(m.decode_step)(qp, st, jnp.argmax(lg, -1))
+    assert lg2.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg2).all())
