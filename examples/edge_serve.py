@@ -1,6 +1,7 @@
-"""End-to-end driver (the paper's kind = inference): batched serving with
-the resource-aware controller migrating attention heads away from an
-injected straggler, live.
+"""End-to-end driver (the paper's kind = inference): continuous-batching
+serving with the resource-aware controller migrating attention heads away
+from an injected straggler, live — with mixed prompt lengths in one batch
+and freed slots re-admitted mid-stream.
 
     PYTHONPATH=src python examples/edge_serve.py
 """
@@ -18,29 +19,35 @@ cfg = get_config("musicgen-large").with_overrides(
 engine = ServingEngine(cfg, n_slots=4, max_seq=96, lam=6,
                        cost_cfg=get_config("musicgen-large"))
 print(f"engine: {engine.net.n_devices} slots, "
-      f"{cfg.n_heads} heads, controller interval λ={engine.lam}")
+      f"{cfg.n_heads} heads, controller interval λ={engine.lam}, "
+      f"prefill buckets {engine.buckets}")
 
 rng = np.random.default_rng(0)
-# phase 1: healthy cluster — controller settles a placement
-for i in range(4):
-    engine.submit(rng.integers(0, cfg.vocab_size, size=12),
-                  max_new_tokens=24)
+# phase 1: healthy cluster — mixed prompt lengths share one batch while
+# the controller settles a placement
+for i, L in enumerate((6, 12, 9, 17)):
+    engine.submit(rng.integers(0, cfg.vocab_size, size=L),
+                  max_new_tokens=18 + 4 * (i % 2))
 engine.run()
 busiest = int(np.bincount(engine.controller.place[:-2],
                           minlength=engine.net.n_devices).argmax())
 before = int((engine.controller.place[:-2] == busiest).sum())
 
 # phase 2: the busiest slot becomes a 25x straggler mid-service —
-# the paper's C_j(τ) drop; Algorithm 1 must MIGRATE heads away
+# the paper's C_j(τ) drop; Algorithm 1 must MIGRATE heads away, permuting
+# a KV cache whose slots sit at different sequence positions
 engine.net.inject_straggler(busiest, slowdown=25.0)
 print(f"injected 25x straggler on slot {busiest} "
       f"(holding {before} heads)")
-for i in range(4):
-    engine.submit(rng.integers(0, cfg.vocab_size, size=12),
+for L in (8, 15, 11, 20):
+    engine.submit(rng.integers(0, cfg.vocab_size, size=L),
                   max_new_tokens=24)
-done = engine.finished + engine.run()
+done = engine.run()
 
 print(f"\nserved {len(done)} requests, {engine.decode_steps} decode steps")
+util = engine.slot_busy_steps / max(engine.decode_steps * engine.n_slots, 1)
+print(f"slot utilization {util:.0%}, "
+      f"prefill compiles bounded to buckets {sorted(engine.prefill_buckets_used)}")
 migr = sum(m['n_migrations'] for m in engine.migration_log)
 print(f"controller ran {len(engine.migration_log)} intervals, "
       f"migrated {migr} head-blocks")

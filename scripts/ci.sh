@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI: install dev deps (best-effort when offline) and run the
+# default test profile (slow tests deselected; RUN_SLOW_TESTS=1 opts in).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt \
+    || echo "[ci] pip install failed (offline?) — using preinstalled deps"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${RUN_SLOW_TESTS:-0}" == "1" ]]; then
+    python -m pytest -x -q -m "slow" "$@"
+fi
+python -m pytest -x -q "$@"

@@ -96,17 +96,23 @@ class ResourceAwareAssigner:
                 comp_used[j] -= comp[i]
                 place[i] = -1
 
-        def device_order(i: int) -> List[int]:
+        def device_order(i: int) -> tuple[List[int], np.ndarray]:
+            """Returns (candidate order, raw load-aware scores).  The same
+            load-aware scores drive both the sort and the caller's
+            feasibility check — one scoring convention (hysteresis and the
+            objective tie-break only perturb the *order*, never the raw
+            scores the feasibility test reads)."""
             bl = self.blocks[i]
             # Load-aware scores: free memory and queued compute on j are
             # subtracted/added (Algorithm 1 line 10's aggregate check, folded
             # into the score so the argmin spreads load instead of stacking
             # everything on the roomiest device).
-            scores = np.array([
+            raw = np.array([
                 score(bl, j, self.blocks, prev, self.cost, net, tau,
                       deadline=self.deadline, mem_used=mem_used,
                       compute_used=comp_used) for j in range(V)])
             stats.score_evals += V
+            scores = raw.copy()
             if prev is not None:
                 scores[prev[i]] *= self.hysteresis  # anti-thrash stickiness
             order = list(np.argsort(scores, kind="stable"))
@@ -125,20 +131,23 @@ class ResourceAwareAssigner:
                     ties.sort(key=marginal)
                     rest = [j for j in order if j not in ties]
                     order = ties + rest
-            return order
+            return order, raw
 
         # lines 5-22 -----------------------------------------------------
         for i in order:
             if time.monotonic() - t0 > self.t_max:
                 return self._fail(stats, t0)
-            bl = self.blocks[i]
-            cand = device_order(i)
+            cand, cand_scores = device_order(i)
             placed = False
             for j in cand:
-                s = score(bl, j, self.blocks, prev, self.cost, net, tau,
-                          deadline=self.deadline)
-                if s > 1.0:
-                    break  # sorted: nothing further is individually feasible
+                if cand_scores[j] > 1.0:
+                    # Infeasible under the SAME load-aware convention the
+                    # candidate list is sorted by.  Skip rather than break:
+                    # hysteresis and the objective tie-break perturb the
+                    # order, so a feasible device can follow an infeasible
+                    # one (the old load-blind `break` here silently skipped
+                    # such devices).
+                    continue
                 do_place(i, j)
                 if assigned_ok(j):
                     placed = True
@@ -163,8 +172,9 @@ class ResourceAwareAssigner:
                                               comp_used, mem, comp, net,
                                               stats, U):
                     return self._fail(stats, t0)
-                # retry on the freshly freed device set
-                cand = device_order(i)
+                # retry on the freshly freed device set (permissive: the
+                # desperate path takes any device the aggregate check OKs)
+                cand, _ = device_order(i)
                 for j in cand:
                     do_place(i, j)
                     if assigned_ok(j):

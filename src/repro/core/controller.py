@@ -58,9 +58,14 @@ class IntervalController:
             self.net.mem_capacity = np.asarray(mem_avail, float)
 
     # ------------------------------------------------------------- decide
-    def step_interval(self) -> dict:
-        """One controller interval: assign, diff, plan migrations."""
-        self.tau += 1
+    def step_interval(self, tau: Optional[int] = None) -> dict:
+        """One controller interval: assign, diff, plan migrations.
+
+        ``tau`` lets the serving engine anchor the cost model to the
+        *actual* decode stream — e.g. the mean KV-cache occupancy across
+        continuous-batching slots (which sit at different depths) — instead
+        of the lock-step +1-per-interval counter the simulator uses."""
+        self.tau = max(1, int(tau)) if tau is not None else self.tau + 1
         prev = self.place
         place, stats = self.assigner.assign(self.net, self.tau, prev)
         if place is None:

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.train import reduced_for_cpu
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import make_engine
 
 
 def main(argv=None):
@@ -28,21 +28,34 @@ def main(argv=None):
                     help="controller interval (decode steps)")
     ap.add_argument("--straggler", type=int, default=-1,
                     help="inject a 20x slowdown on this mesh slot")
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "continuous", "wave"),
+                    help="continuous batching (default for linear-cache "
+                         "archs) or the wave baseline")
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="vary prompt lengths per request (the workload "
+                         "continuous batching exists for)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_for_cpu(cfg)
-    eng = ServingEngine(cfg, n_slots=args.slots,
-                        max_seq=args.prompt_len + args.tokens + 8,
-                        lam=args.lam)
+    eng = make_engine(cfg, mode=args.engine, n_slots=args.slots,
+                      max_seq=args.prompt_len + args.tokens + 8,
+                      lam=args.lam)
+    print(f"[serve] engine: {type(eng).__name__}")
     if args.straggler >= 0:
         eng.net.inject_straggler(args.straggler, slowdown=20.0)
         print(f"[serve] injected straggler on slot {args.straggler}")
     rng = np.random.default_rng(0)
     t0 = time.time()
-    for _ in range(args.requests):
-        eng.submit(rng.integers(0, cfg.vocab_size, size=args.prompt_len),
+    for i in range(args.requests):
+        if args.mixed_lengths:
+            plen = int(rng.integers(max(2, args.prompt_len // 2),
+                                    args.prompt_len + 1))
+        else:
+            plen = args.prompt_len
+        eng.submit(rng.integers(0, cfg.vocab_size, size=plen),
                    max_new_tokens=args.tokens)
     done = eng.run()
     wall = time.time() - t0
@@ -52,6 +65,10 @@ def main(argv=None):
     migr = sum(m["n_migrations"] for m in eng.migration_log)
     print(f"[serve] controller intervals={len(eng.migration_log)} "
           f"head-migrations={migr}")
+    if hasattr(eng, "slot_busy_steps") and eng.decode_steps:
+        util = eng.slot_busy_steps / (eng.decode_steps * eng.n_slots)
+        print(f"[serve] slot utilization {util:.0%}, prefill buckets "
+              f"{sorted(eng.prefill_buckets_used)}")
     for r in done[:3]:
         print(f"  req {r.rid}: ttft={r.t_first - r.t_submit:.2f}s "
               f"total={r.t_done - r.t_submit:.2f}s "

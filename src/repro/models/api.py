@@ -7,6 +7,13 @@
   prefill(params, state, tokens) -> (logits, state)
   decode_step(params, state, tokens) -> (logits, state)
 
+Attention-backed models additionally expose the continuous-batching slot
+API (``state["pos"]`` becomes a (B,) vector via
+``init_decode_state(..., per_slot=True)``):
+
+  prefill_bucketed(params, state, tokens, length) -> (logits, state)
+  insert_slot(state, sub, slot) -> state
+
 ``input_specs`` produces ShapeDtypeStruct stand-ins for every model input of
 a (arch x shape) cell — weak-type-correct, shardable, no device allocation —
 used by the multi-pod dry-run.

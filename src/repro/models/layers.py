@@ -88,6 +88,42 @@ def zero_pad_heads(w: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Differentiable optimization barrier (layer-slice pinning under scan)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _diff_opt_barrier(flat):
+    return jax.lax.optimization_barrier(flat)
+
+
+def _dob_fwd(flat):
+    return jax.lax.optimization_barrier(flat), None
+
+
+def _dob_bwd(_, g):
+    # pin the cotangents too — the backward scan has the same
+    # gather-of-slice hoisting exposure on the gradients; float0 /
+    # symbolic-zero leaves (int inputs) pass through untouched.
+    out = [t if t is None or getattr(t, "dtype", None) == jax.dtypes.float0
+           else jax.lax.optimization_barrier(t) for t in g]
+    return (out,)
+
+
+_diff_opt_barrier.defvjp(_dob_fwd, _dob_bwd)
+
+
+def pin_layer_slice(xs):
+    """``jax.lax.optimization_barrier`` over a pytree, usable under
+    ``jax.grad``: ``optimization_barrier`` has no differentiation rule, so
+    training steps that scan over barriered stacked layer params failed to
+    trace.  Identity VJP with barriered cotangents keeps the FSDP
+    no-hoist property (see TransformerLM._barrier) in both directions."""
+    flat, td = jax.tree_util.tree_flatten(xs)
+    return jax.tree_util.tree_unflatten(td, _diff_opt_barrier(flat))
+
+
+# ---------------------------------------------------------------------------
 # Norms
 # ---------------------------------------------------------------------------
 
@@ -285,7 +321,11 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
       - ring cache (sliding window, cache_len == window, decode S=1): slot
         ``cache_pos % window``; "pos" (window,) holds absolute positions
         (init to a large negative so empty slots never pass the mask).
-    cache_pos: scalar int32 — absolute position of the first query token.
+    cache_pos: absolute position of the first query token — a scalar int32,
+      or a (B,) int32 vector for slot-level continuous batching (linear
+      cache, S == 1 only): row b writes its new K/V at its own position
+      ``cache_pos[b]`` and the causal mask is taken per row, so slots at
+      different sequence depths decode in one batch.
     Returns (out, new_cache).
     """
     B, S = x.shape[0], x.shape[1]
@@ -363,6 +403,17 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
             out = attend(kd, vd, kv_pos, mask)
             out = jnp.einsum("bshk,hkd->bsd", out, wt(p, "wo", out.dtype))
             return part.constrain(out, ("batch", "res_seq", "d_model")), new_cache
+        elif getattr(cache_pos, "ndim", 0) == 1:
+            # per-slot linear cache write (continuous batching, S == 1):
+            # scatter row b's new K/V to its own position. Out-of-range
+            # positions (retired slots past cache_len) are dropped.
+            rows = jnp.arange(B)
+            cp = jnp.asarray(cache_pos, jnp.int32)
+            ck = cache["k"].at[rows, cp].set(k[:, 0], mode="drop")
+            cv = cache["v"].at[rows, cp].set(v[:, 0], mode="drop")
+            slot_pos = None
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(cache_len, dtype=jnp.int32)[None, :], (B, cache_len))
         else:
             ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_pos, 0, 0))
             cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_pos, 0, 0))

@@ -187,9 +187,8 @@ class RWKV6Model:
     def _run_layers(self, params, x, state):
         def body(x, xs):
             if self.part.mesh is not None:  # pin per-layer slice (no hoist)
-                flat, td = jax.tree_util.tree_flatten(xs)
-                xs = jax.tree_util.tree_unflatten(
-                    td, jax.lax.optimization_barrier(flat))
+                from repro.models.layers import pin_layer_slice
+                xs = pin_layer_slice(xs)
             p, st = xs
             x, new_st = self._layer(p, x, st)
             return x, new_st

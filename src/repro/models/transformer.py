@@ -106,12 +106,11 @@ class TransformerLM:
         from rewriting gather(slice(params,i)) into slice(gather(params))
         and hoisting the FSDP all-gather of the whole stacked layer pytree
         out of the while loop (which materializes all layers' gathered
-        weights at once — DESIGN.md §9 / §Perf)."""
+        weights at once — DESIGN.md §9 / §Perf).  Differentiable (identity
+        VJP, layers.pin_layer_slice) so train steps can grad through it."""
         if self.part.mesh is None:
             return xs
-        flat, td = jax.tree_util.tree_flatten(xs)
-        flat = jax.lax.optimization_barrier(flat)
-        return jax.tree_util.tree_unflatten(td, flat)
+        return L.pin_layer_slice(xs)
 
     # ----------------------------------------------------------------- layer
     def _layer(self, p: dict, x, positions, cache, cache_pos):
@@ -284,9 +283,14 @@ class TransformerLM:
 
     def init_decode_state(self, params, batch: int, max_seq: int, *,
                           prompt=None, img_embeds=None, img_mask=None,
-                          dtype=None) -> Dict[str, Any]:
+                          dtype=None, per_slot: bool = False) -> Dict[str, Any]:
+        """``per_slot=True`` keeps one position per batch row (continuous
+        batching): decode advances each slot independently and prefills can
+        land rows at different depths via :meth:`insert_slot`."""
+        pos0 = jnp.zeros((batch,), jnp.int32) if per_slot \
+            else jnp.zeros((), jnp.int32)
         state: Dict[str, Any] = {"cache": self.init_cache(batch, max_seq, dtype),
-                                 "pos": jnp.zeros((), jnp.int32)}
+                                 "pos": pos0}
         if self.is_vlm:
             state["img_kv"] = self._project_img_kv(params, img_embeds)
             state["img_mask"] = img_mask
@@ -309,15 +313,71 @@ class TransformerLM:
 
     def decode_step(self, params, state, tokens):
         """One autoregressive step. tokens: (B,) int32. Returns (logits (B,V),
-        new state)."""
+        new state).
+
+        ``state["pos"]`` is either the shared scalar position (lock-step
+        batch) or a (B,) vector (per-slot continuous batching): each row
+        embeds/attends/writes at its own depth, so slots prefilled at
+        different times decode together.
+        """
         cfg, part = self.cfg, self.part
         B = tokens.shape[0]
         pos = state["pos"]
+        per_slot = getattr(pos, "ndim", 0) == 1
         x = L.embed(cfg, params, tokens[:, None], part)
-        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        if per_slot:
+            positions = pos[:, None].astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
         x, new_cache, _ = self._run_layers(
             params, x, positions, state["cache"], pos,
             img_kv=state.get("img_kv"), img_mask=state.get("img_mask"))
         x = L.apply_norm(cfg, params, "ln_f", x)
         logits = L.unembed(cfg, params, x, part)
-        return logits[:, 0], dict(state, cache=new_cache, pos=pos + 1)
+        if per_slot:
+            # clamp retired slots at the cache edge (their writes drop)
+            T = state["cache"]["k"].shape[-3]
+            new_pos = jnp.minimum(pos + 1, jnp.int32(T))
+        else:
+            new_pos = pos + 1
+        return logits[:, 0], dict(state, cache=new_cache, pos=new_pos)
+
+    # ----------------------------------------------- continuous batching
+    def prefill_bucketed(self, params, state, tokens, length):
+        """Prefill right-padded prompts: ``tokens`` (B, Lb) padded to a
+        bucket length, ``length`` (B,) true prompt lengths.  Returns the
+        logits of each row's LAST REAL token and a per-slot state with
+        ``pos == length``.  Padding rows write garbage K/V at indices
+        >= length, but the causal mask hides index q until decode step q
+        overwrites it first, so the garbage is never attended.  Compiles
+        once per bucket length Lb, not per prompt length."""
+        cfg, part = self.cfg, self.part
+        B, S = tokens.shape
+        x = L.embed(cfg, params, tokens, part)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, new_cache, _ = self._run_layers(
+            params, x, positions, state["cache"], jnp.zeros((), jnp.int32),
+            img_kv=state.get("img_kv"), img_mask=state.get("img_mask"))
+        x = L.apply_norm(cfg, params, "ln_f", x)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(length - 1, 0)[:, None, None].astype(jnp.int32),
+            axis=1)                                      # (B, 1, D)
+        logits = L.unembed(cfg, params, last, part)
+        return logits[:, 0], dict(state, cache=new_cache,
+                                  pos=jnp.asarray(length, jnp.int32))
+
+    def insert_slot(self, state, sub, slot):
+        """Copy a batch-1 prefilled ``sub`` state (cache length Lb <= T)
+        into batch row ``slot`` of a persistent per-slot decode state:
+        the slot-manager write of continuous batching.  ``slot`` may be a
+        traced scalar — one compile serves every slot."""
+        cache, sub_cache = state["cache"], sub["cache"]
+        slot = jnp.asarray(slot, jnp.int32)
+        upd = {}
+        for name in ("k", "v"):
+            src = sub_cache[name].astype(cache[name].dtype)
+            start = (jnp.int32(0), slot) + (jnp.int32(0),) * (cache[name].ndim - 2)
+            upd[name] = jax.lax.dynamic_update_slice(cache[name], src, start)
+        pos = jax.lax.dynamic_update_slice(
+            state["pos"], jnp.asarray(sub["pos"], jnp.int32), (slot,))
+        return dict(state, cache=dict(cache, **upd), pos=pos)

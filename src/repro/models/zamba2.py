@@ -66,9 +66,8 @@ class Zamba2Model:
         def group_body(carry, xs):
             x = carry
             if self.part.mesh is not None:  # pin per-group slice (no hoist)
-                flat, td = jax.tree_util.tree_flatten(xs)
-                xs = jax.tree_util.tree_unflatten(
-                    td, jax.lax.optimization_barrier(flat))
+                from repro.models.layers import pin_layer_slice
+                xs = pin_layer_slice(xs)
             mamba_p, attn_cache, mamba_state = xs
             x, new_attn_cache = self._shared_attn(params, x, positions,
                                                   attn_cache, cache_pos)

@@ -1,12 +1,31 @@
-"""Batched serving engine with the paper's controller in the loop.
+"""Serving engines with the paper's controller in the loop.
 
-Wave-based static batching: up to ``n_slots`` requests with equal-length
-prompts form a wave; the wave prefills as one batch, then decodes in
-lock-step until every request hits its token budget.  Every λ decode steps
-the IntervalController observes step-time telemetry + cache growth,
-re-runs Algorithm 1, and applies any head migrations to the cache in the
-inter-step gap — the paper's per-interval migration loop as a production
-serving feature (straggler and memory-pressure mitigation; DESIGN.md §9).
+Two schedulers over the same model/controller stack:
+
+``ServingEngine`` (continuous batching, the production path)
+  A persistent ``(n_slots, max_seq)`` KV cache with per-slot positions.
+  Any queued request is admitted into any free slot the moment one frees:
+  the prompt is right-padded to a small set of bucketed lengths (so prefill
+  JIT recompiles stay bounded), prefilled at batch 1, and spliced into the
+  slot's cache row (``insert_slot``).  Decode runs one step for the whole
+  batch with per-slot attention masking, so slots at different sequence
+  depths generate together — no equal-prompt-length restriction and no
+  wave barrier.  This is the slot-based decode path production systems use
+  (MaxText-style prefill-then-insert; Pope et al. 2022).
+
+``WaveServingEngine`` (the old static scheduler, kept as the baseline)
+  Up to ``n_slots`` equal-length prompts form a wave; the wave prefills as
+  one batch and decodes in lock-step until every request finishes.  Freed
+  slots stay dead until the wave drains and each new prompt length costs a
+  fresh prefill compile — ``benchmarks/serving_throughput.py`` quantifies
+  the gap.
+
+Every λ decode steps the IntervalController observes step-time telemetry
+plus the *actual* per-slot cache occupancy, re-runs Algorithm 1, and
+applies head migrations to weights AND cache in the inter-step gap — the
+paper's per-interval migration loop as a production serving feature.
+Under continuous batching the migrated cache holds slots at unequal
+positions, the realistic version of §III.D's loop.
 
 On a single CPU host this runs unsharded (NULL partitioner) and the
 controller drives a *simulated* slot network — the same code path the TPU
@@ -14,9 +33,10 @@ deployment uses with mesh slots.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +62,36 @@ class Request:
     t_done: float = 0.0
 
 
-class ServingEngine:
+def supports_continuous(cfg: ModelConfig) -> Optional[str]:
+    """None when ``cfg`` can run the slot-level scheduler, else the reason
+    it can't (cfg-only, so ``make_engine`` decides before building params)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return f"{cfg.family} archs have no prefill_bucketed/insert_slot API"
+    if cfg.family == "vlm":
+        return "VLM decode states (img_kv, grouped caches) are not slot-wired"
+    if cfg.sliding_window:
+        return "continuous batching needs a linear KV cache, not a ring"
+    if getattr(cfg, "kv_quant", False):
+        return "continuous batching over int8 KV caches is not wired up yet"
+    return None
+
+
+def default_buckets(max_seq: int, lo: int = 8) -> List[int]:
+    """Power-of-two prompt buckets up to ``max_seq``: the prefill compile
+    count is bounded by len(buckets), not by the number of distinct prompt
+    lengths."""
+    out, b = [], lo
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return sorted(set(out))
+
+
+class _EngineBase:
+    """Model + controller wiring and the PRNG-disciplined sampler shared by
+    both schedulers."""
+
     def __init__(self, cfg: ModelConfig, *, n_slots: int = 4,
                  max_seq: int = 512, lam: int = 16, seed: int = 0,
                  net: Optional[DeviceNetwork] = None, cost_cfg=None,
@@ -67,11 +116,11 @@ class ServingEngine:
         n_heads = (hd.Hp if hd and hd.Hp else max(cfg.n_heads, 1))
         heads_per_slot = max(1, n_heads // self.net.n_devices)
         ccfg = cost_cfg or cfg
-        cost = CostModel(d_model=ccfg.d_model, n_heads=max(cfg.n_heads, 1),
-                         L0=8, n_layers=ccfg.n_layers, lam=lam,
-                         compute_mode="incremental")
+        self.cost = CostModel(d_model=ccfg.d_model, n_heads=max(cfg.n_heads, 1),
+                              L0=8, n_layers=ccfg.n_layers, lam=lam,
+                              compute_mode="incremental")
         self.controller = IntervalController(
-            max(cfg.n_heads, 1), cost, self.net,
+            max(cfg.n_heads, 1), self.cost, self.net,
             ControllerConfig(lam=lam, heads_per_slot=heads_per_slot))
         self.monitor = HeartbeatMonitor(self.net.n_devices)
         self.lam = lam
@@ -79,6 +128,14 @@ class ServingEngine:
         self.migration_log: List[dict] = []
         self._decode_jit = jax.jit(self.model.decode_step)
         self._prefill_jit = jax.jit(self.model.prefill)
+        # sampler: one fresh fold_in key per _sample call — the post-prefill
+        # sample and the first post-decode sample can no longer collide on
+        # the same PRNGKey(decode_steps) counter value.
+        self._sample_base = jax.random.PRNGKey(seed + 0x5EED)
+        self.sample_count = 0
+        # bounded: one entry per non-greedy sample would otherwise grow for
+        # the life of a long-running engine (observability, read by tests)
+        self.sample_key_log: Deque[tuple] = collections.deque(maxlen=4096)
 
     # ---------------------------------------------------------------- intake
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
@@ -87,6 +144,197 @@ class ServingEngine:
         self._rid += 1
         self.queue.append(req)
         return req.rid
+
+    # --------------------------------------------------------------- sampler
+    def _next_sample_key(self):
+        key = jax.random.fold_in(self._sample_base, self.sample_count)
+        self.sample_count += 1
+        try:
+            data = jax.random.key_data(key)
+        except TypeError:            # legacy uint32 keys
+            data = key
+        self.sample_key_log.append(tuple(np.asarray(data).ravel().tolist()))
+        return key
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        return np.asarray(jax.random.categorical(self._next_sample_key(),
+                                                 logits))
+
+    # ------------------------------------------------------------- telemetry
+    def _record_step(self, dt: float):
+        for j in range(self.net.n_devices):
+            self.monitor.record_step(j, dt)
+
+    # --------------------------------------------------------------- interval
+    def _interval(self, state, tau_tokens: Optional[int] = None):
+        """The paper's controller interval: observe -> Algorithm 1 ->
+        migrate head shards in the decode gap.  ``tau_tokens`` anchors the
+        cost model to the observed decode stream (mean slot occupancy)."""
+        self.net.step_background_load()
+        self.controller.observe(compute_avail=self.net.compute_avail)
+        tau = None
+        if tau_tokens is not None:
+            tau = max(1, round((tau_tokens - self.cost.L0)
+                               / max(self.cost.lam, 1)))
+        plan = self.controller.step_interval(tau=tau)
+        hd = getattr(self.model, "hd", None)
+        mha = hd is not None and hd.Hp and hd.KvE == hd.Hp and hd.rep == 1
+        if plan["migrations"] and mha:
+            # physical migration: permute weights AND cache by the same head
+            # permutation — model function is invariant, placement changes
+            # (placement_bridge.permute_model_heads). GQA archs migrate at
+            # group granularity; this demo engine logs those without moving.
+            cache = state.get("cache")
+            if isinstance(cache, dict) and "k" in cache \
+                    and cache["k"].ndim >= 4:
+                prev = plan["prev_perm"]
+                old_pos = {int(h): i for i, h in enumerate(prev)}
+                rel = np.array([old_pos[int(h)] for h in plan["perm"]])
+                from repro.core.placement_bridge import permute_model_heads
+                self.params = permute_model_heads(self.params, rel)
+                k2, v2 = (jnp.take(cache["k"], jnp.asarray(rel), axis=-2),
+                          jnp.take(cache["v"], jnp.asarray(rel), axis=-2))
+                state = dict(state, cache=dict(cache, k=k2, v=v2))
+        self.migration_log.append({
+            "step": self.decode_steps,
+            "n_migrations": len(plan["migrations"]),
+            "d_mig_est": plan["d_mig_est"]})
+        return state
+
+
+class ServingEngine(_EngineBase):
+    """Continuous-batching scheduler: persistent per-slot KV cache, admit-
+    on-free-slot, bucketed prefill, per-slot decode masking."""
+
+    def __init__(self, cfg: ModelConfig, *,
+                 buckets: Optional[Sequence[int]] = None, **kw):
+        reason = supports_continuous(cfg)   # cheap cfg-only check BEFORE
+        if reason is not None:              # params/controller are built
+            raise NotImplementedError(reason + "; use WaveServingEngine")
+        super().__init__(cfg, **kw)
+        assert hasattr(self.model, "prefill_bucketed"), type(self.model)
+        self.buckets = sorted(set(buckets)) if buckets \
+            else default_buckets(self.max_seq)
+        self.state: Dict[str, Any] = self.model.init_decode_state(
+            self.params, self.n_slots, self.max_seq, per_slot=True)
+        self.slots: List[Optional[Request]] = [None] * self.n_slots
+        self._next = np.zeros(self.n_slots, np.int32)
+        self._prefill_bucketed_jit = jax.jit(self.model.prefill_bucketed)
+        self._insert_jit = jax.jit(self.model.insert_slot)
+        # observability: scheduler decisions + compile boundedness (bounded,
+        # like sample_key_log: a serving loop must not grow per request)
+        self.admission_log: Deque[dict] = \
+            collections.deque(maxlen=4096)    # {step, slot, rid, bucket}
+        self.prefill_buckets_used: set = set()
+        self.slot_busy_steps = 0              # sum of active slots per step
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        self._bucket(len(np.asarray(prompt)))   # reject over-long at intake,
+        return super().submit(prompt, max_new_tokens)  # not mid-run
+
+    # ------------------------------------------------------------- scheduler
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"prompt length {n} exceeds max bucket "
+                         f"{self.buckets[-1]}")
+
+    def _retire(self, slot: int):
+        r = self.slots[slot]
+        r.done = True
+        r.t_done = time.monotonic()
+        self.finished.append(r)
+        self.slots[slot] = None
+        self._next[slot] = 0
+
+    def _finish_check(self, slot: int):
+        r = self.slots[slot]
+        if (len(r.out_tokens) >= r.max_new_tokens
+                or len(r.prompt) + len(r.out_tokens) >= self.max_seq - 1):
+            self._retire(slot)
+
+    def _admit(self):
+        """Fill every free slot from the queue (FIFO, any prompt length).
+        Loops until no slot is free — a request that retires at admission
+        (1-token budget) frees its slot for the next queued request."""
+        while self.queue:
+            s = next((i for i in range(self.n_slots)
+                      if self.slots[i] is None), None)
+            if s is None:
+                return
+            r = self.queue.pop(0)
+            L0 = len(r.prompt)
+            Lb = self._bucket(L0)
+            toks = np.zeros((1, Lb), np.int32)
+            toks[0, :L0] = r.prompt
+            sub = self.model.init_decode_state(self.params, 1, Lb,
+                                               per_slot=True)
+            logits, sub = self._prefill_bucketed_jit(
+                self.params, sub, jnp.asarray(toks),
+                jnp.asarray([L0], jnp.int32))
+            self.prefill_buckets_used.add(Lb)
+            self.state = self._insert_jit(self.state, sub, s)
+            r.t_first = time.monotonic()
+            self.slots[s] = r
+            tok = int(self._sample(logits)[0])
+            self._next[s] = tok
+            r.out_tokens.append(tok)
+            self.admission_log.append({"step": self.decode_steps, "slot": s,
+                                       "rid": r.rid, "bucket": Lb})
+            self._finish_check(s)
+
+    def _active(self) -> List[int]:
+        return [s for s in range(self.n_slots) if self.slots[s] is not None]
+
+    def _occupancy(self) -> float:
+        """Mean tokens resident per active slot (prompt + generated)."""
+        act = self._active()
+        if not act:
+            return 0.0
+        return float(np.mean([len(self.slots[s].prompt)
+                              + len(self.slots[s].out_tokens) for s in act]))
+
+    def step(self) -> bool:
+        """One scheduler iteration: admit into free slots, then one decode
+        step across all active slots.  Returns False when idle."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return False
+        t0 = time.monotonic()
+        logits, self.state = self._decode_jit(self.params, self.state,
+                                              jnp.asarray(self._next))
+        jax.block_until_ready(logits)
+        dt = time.monotonic() - t0
+        toks = self._sample(logits)
+        self.decode_steps += 1
+        self.slot_busy_steps += len(active)
+        for s in active:
+            tok = int(toks[s])
+            self.slots[s].out_tokens.append(tok)
+            self._next[s] = tok
+            self._finish_check(s)
+        self._record_step(dt)
+        if self.decode_steps % self.lam == 0:
+            self.state = self._interval(self.state,
+                                        tau_tokens=self._occupancy())
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        while self.decode_steps < max_steps:
+            if not self.step():
+                break
+        return self.finished
+
+
+class WaveServingEngine(_EngineBase):
+    """The old wave-based static scheduler: equal-length prompts per wave,
+    lock-step decode, slots freed only when the wave drains.  Kept as the
+    baseline for ``benchmarks/serving_throughput.py``."""
 
     def _next_wave(self) -> List[Request]:
         """Up to n_slots queued requests with equal prompt length."""
@@ -97,13 +345,6 @@ class ServingEngine:
         for r in wave:
             self.queue.remove(r)
         return wave
-
-    # ----------------------------------------------------------------- decode
-    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
-        if self.greedy:
-            return np.asarray(jnp.argmax(logits, axis=-1))
-        key = jax.random.PRNGKey(self.decode_steps)
-        return np.asarray(jax.random.categorical(key, logits))
 
     def _run_wave(self, wave: List[Request], max_steps: int):
         B = self.n_slots
@@ -136,40 +377,9 @@ class ServingEngine:
             dt = time.monotonic() - t0
             nxt = self._sample(logits)
             self.decode_steps += 1
-            for j in range(self.net.n_devices):
-                self.monitor.record_step(j, dt)
+            self._record_step(dt)
             if self.decode_steps % self.lam == 0:
                 state = self._interval(state)
-
-    def _interval(self, state):
-        """The paper's controller interval: observe -> Algorithm 1 ->
-        migrate head shards in the decode gap."""
-        self.net.step_background_load()
-        self.controller.observe(compute_avail=self.net.compute_avail)
-        plan = self.controller.step_interval()
-        hd = getattr(self.model, "hd", None)
-        mha = hd is not None and hd.Hp and hd.KvE == hd.Hp and hd.rep == 1
-        if plan["migrations"] and mha:
-            # physical migration: permute weights AND cache by the same head
-            # permutation — model function is invariant, placement changes
-            # (placement_bridge.permute_model_heads). GQA archs migrate at
-            # group granularity; this demo engine logs those without moving.
-            cache = state.get("cache")
-            if isinstance(cache, dict) and "k" in cache \
-                    and cache["k"].ndim >= 4:
-                prev = plan["prev_perm"]
-                old_pos = {int(h): i for i, h in enumerate(prev)}
-                rel = np.array([old_pos[int(h)] for h in plan["perm"]])
-                from repro.core.placement_bridge import permute_model_heads
-                self.params = permute_model_heads(self.params, rel)
-                k2, v2 = (jnp.take(cache["k"], jnp.asarray(rel), axis=-2),
-                          jnp.take(cache["v"], jnp.asarray(rel), axis=-2))
-                state = dict(state, cache=dict(cache, k=k2, v=v2))
-        self.migration_log.append({
-            "step": self.decode_steps,
-            "n_migrations": len(plan["migrations"]),
-            "d_mig_est": plan["d_mig_est"]})
-        return state
 
     def run(self, max_steps: int = 10_000):
         while self.queue and self.decode_steps < max_steps:
@@ -178,3 +388,16 @@ class ServingEngine:
                 break
             self._run_wave(wave, max_steps)
         return self.finished
+
+
+def make_engine(cfg: ModelConfig, *, mode: str = "auto", **kw):
+    """``continuous`` | ``wave`` | ``auto`` (continuous when the arch
+    supports the slot API, wave otherwise)."""
+    if mode == "wave":
+        return WaveServingEngine(cfg, **kw)
+    if mode == "continuous":
+        return ServingEngine(cfg, **kw)
+    try:
+        return ServingEngine(cfg, **kw)
+    except NotImplementedError:
+        return WaveServingEngine(cfg, **kw)

@@ -245,3 +245,45 @@ def test_lookahead_beats_or_matches_myopic():
     la = simulate(LookaheadPolicy(blocks, cost, deadline=0.2),
                   blocks, cost, net, 300, seed=11)
     assert la.total_latency <= ra.total_latency * 1.05
+
+
+# --------------------------------------- candidate-loop scoring regression
+def test_assign_candidate_loop_uses_one_scoring_convention():
+    """Regression (PR 1): the candidate list is sorted by the LOAD-AWARE
+    score, but the old early-exit recomputed a load-blind score and
+    ``break``-ed on s > 1.0 assuming the list was sorted by that same
+    quantity.  With hysteresis discounting the previous device, an
+    individually-infeasible prev device can sort FIRST — the old break then
+    skipped every feasible device behind it, bouncing the block through
+    ResolveResourceOverload with inconsistent migration accounting.
+
+    Construct exactly that: prev holds everything on device 0, whose
+    compute has degraded so the ffn's raw score there is 1.05 (> 1,
+    infeasible) but 0.945 after the 0.9 hysteresis discount — sorting it
+    ahead of device 1 at 0.99 (feasible).  The fixed loop must place the
+    ffn on device 1 via the primary path, with stats.migrations equal to
+    the number of blocks that actually moved."""
+    n_heads = 8
+    blocks = make_blocks(n_heads)
+    cost = CostModel(d_model=512, n_heads=n_heads, L0=64, lam=1)
+    ffn = next(b for b in blocks if b.kind == FFN)
+    ffn_comp = cost.compute(ffn, 1)
+    C0 = ffn_comp / 1.05          # raw score on dev0: 1.05 (infeasible)
+    C1 = ffn_comp / 0.99          # raw score on dev1: 0.99 (feasible)
+    bw = np.full((2, 2), 1e12)
+    np.fill_diagonal(bw, np.inf)
+    net = DeviceNetwork(mem_capacity=np.array([4.0 * GB, 4.0 * GB]),
+                        compute_max=np.array([C0, C1]),
+                        compute_avail=np.array([C0, C1]),
+                        bandwidth=bw, controller=0,
+                        rng=np.random.default_rng(0))
+    prev = np.zeros(len(blocks), dtype=int)
+    assigner = ResourceAwareAssigner(blocks, cost, deadline=1.0,
+                                     objective_tiebreak=False)
+    place, stats = assigner.assign(net, 1, prev)
+    assert place is not None and not stats.infeasible
+    assert place[ffn.index] == 1          # feasible device was NOT skipped
+    # heads + proj stay put: only the ffn migrates, and the stats agree
+    moved = int((place != prev).sum())
+    assert moved == 1
+    assert stats.migrations == moved

@@ -2,6 +2,7 @@
 actual sharded lower+compile on a 16-virtual-device mesh (subprocess so the
 main process keeps 1 CPU device)."""
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -84,10 +85,16 @@ def test_collective_promotion_halved():
 
 
 # ------------------------------------------------- sharded compile (16 dev)
-@pytest.mark.slow
+@pytest.mark.slow  # opt in with `-m slow` (or RUN_SLOW_TESTS=1 scripts/ci.sh)
 def test_sharded_train_step_compiles_16dev():
     """Reduced llama3 train step lowers+compiles on a (4,4) mesh with the
-    production sharding rules (subprocess: device count is process-global)."""
+    production sharding rules (subprocess: device count is process-global).
+
+    Gated behind the registered ``slow`` marker — deselected by the default
+    tier-1 profile (see pyproject.toml): a subprocess spinning up 16
+    virtual XLA devices is environment-sensitive and was the seed suite's
+    420 s timeout.  The compiled shape is kept small (seq 32, d_model 128)
+    so the opted-in run finishes in seconds."""
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
@@ -103,8 +110,8 @@ def test_sharded_train_step_compiles_16dev():
         from repro.optim.adamw import AdamW, AdamWState
 
         cfg = get_config("llama3-8b").with_overrides(
-            n_layers=2, d_model=256, d_ff=512, n_heads=8, n_kv_heads=4,
-            d_head=32, vocab_size=512)
+            n_layers=2, d_model=128, d_ff=256, n_heads=8, n_kv_heads=4,
+            d_head=16, vocab_size=512)
         mesh = jax.make_mesh((4, 4), ("data", "model"))
         part = make_partitioner(mesh, fsdp=True, sp=True)
         model = build_model(cfg, tp=4, part=part, remat="full")
@@ -115,8 +122,8 @@ def test_sharded_train_step_compiles_16dev():
         o_sh = AdamWState(step=NamedSharding(mesh, P()),
                           mu=param_shardings(opt_s.mu, cfg, mesh, fsdp=True),
                           nu=param_shardings(opt_s.nu, cfg, mesh, fsdp=True))
-        batch = {"tokens": jax.ShapeDtypeStruct((8, 128), jnp.int32),
-                 "labels": jax.ShapeDtypeStruct((8, 128), jnp.int32)}
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
         b_sh = batch_shardings(batch, mesh)
         fn = jax.jit(make_train_step(model, opt),
                      in_shardings=(p_sh, o_sh, b_sh),
@@ -130,10 +137,14 @@ def test_sharded_train_step_compiles_16dev():
         print(json.dumps({"flops": fa["dot_flops"],
                           "coll": sum(cb.values())}))
     """)
+    # JAX_PLATFORMS must be pinned: without it jax probes for accelerator
+    # plugins in the bare env and can hang past the subprocess timeout —
+    # this, plus optimization_barrier lacking a differentiation rule
+    # (fixed via layers.pin_layer_slice), was the seed-suite timeout.
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=420,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         text=True, timeout=420, env=env)
     assert out.returncode == 0, out.stderr[-2000:]
     stats = json.loads(out.stdout.strip().splitlines()[-1])
     assert stats["flops"] > 0 and stats["coll"] > 0

@@ -1,7 +1,13 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skipped cleanly when hypothesis is absent (it is a dev-only dependency:
+``pip install -r requirements-dev.txt``)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import DeviceNetwork, inference_delay, memory_usage, \
