@@ -3,15 +3,26 @@
 Large LLM setup: h=32, D=2048, L0=64, GPT-2/LLaMA scale via the 32-layer
 column lift (EXPERIMENTS.md §Reproduction notes), incremental decode
 compute, λ=1 (the paper's worst-case migration stress).
+
+The layered scenario axis (``layered_*``) swaps the column lift for the
+true per-layer block graph (``layer_mode="graph"``): an 8-layer, 8-head
+decoder on an 8-device edge cluster with heterogeneous link bandwidths
+(0.05–2 Gbps) and per-device memory around ONE decoder layer's footprint
+— the regime where placement granularity decides feasibility and
+inter-layer hops are priced.
 """
-from repro.core.blocks import CostModel, make_blocks
-from repro.core.network import DeviceNetwork, GB
+from repro.core.blocks import CostModel, graph_of, make_blocks
+from repro.core.network import DeviceNetwork, GB, GBPS
 
 H = 32
 D = 2048
 L0 = 64
 N_LAYERS = 32
 DEADLINE = 0.2
+
+LAYERED_H = 8
+LAYERED_L = 8
+LAYERED_DEADLINE = 0.5
 
 
 def paper_cost(**over):
@@ -28,6 +39,29 @@ def paper_blocks():
 def medium_net(seed=7, tight=False):
     mem = (1 * GB, 3 * GB) if tight else (2 * GB, 8 * GB)
     return DeviceNetwork.sample(25, seed=seed, mem_range=mem)
+
+
+def layered_cost(**over):
+    kw = dict(d_model=D, n_heads=LAYERED_H, L0=L0, n_layers=LAYERED_L,
+              compute_mode="incremental", layer_mode="graph")
+    kw.update(over)
+    return CostModel(**kw)
+
+
+def layered_blocks():
+    return make_blocks(LAYERED_H, LAYERED_L)
+
+
+def layered_net(seed=0, n_devices=8, horizon_tau=200):
+    """Heterogeneous-bandwidth edge cluster sized so each device holds
+    roughly one decoder layer (at the end-of-horizon KV footprint)."""
+    cost = layered_cost()
+    layer_mem = sum(cost.memory(b, horizon_tau)
+                    for b in graph_of(layered_blocks()).layer_blocks(0))
+    return DeviceNetwork.sample(n_devices, seed=seed,
+                                mem_range=(1.0 * layer_mem, 1.5 * layer_mem),
+                                bw_range=(0.05 * GBPS, 2 * GBPS),
+                                compute_range=(20e9, 120e9))
 
 
 def policy_kwargs(name):

@@ -1,17 +1,26 @@
-"""Benchmark driver — one module per paper table/figure (+ roofline and
-kernel micro-benches). Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver — one module per paper table/figure (+ roofline,
+kernel micro-benches, and the serving-engine throughput comparison).
+Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--only small_scale,fig3,...]
+                                          [--json DIR]
+
+``--json DIR`` additionally writes each group's rows to
+``DIR/BENCH_<group>.json`` as ``[{"name", "us_per_call", "derived"}, ...]``
+— the machine-readable perf trajectory.
 """
 import argparse
+import json
+import os
 import sys
 import traceback
 
 MODULES = [
     ("small_scale", "benchmarks.small_scale"),          # §V.C table
-    ("fig3", "benchmarks.latency_vs_tokens"),           # Fig. 3
+    ("fig3", "benchmarks.latency_vs_tokens"),           # Fig. 3 (+ layered)
     ("fig4", "benchmarks.memory_vs_tokens"),            # Fig. 4
-    ("scalability", "benchmarks.scalability"),          # §V.D(c)
+    ("scalability", "benchmarks.scalability"),          # §V.D(c) (+ layers)
+    ("serving_throughput", "benchmarks.serving_throughput"),  # engine tok/s
     ("kernels", "benchmarks.kernel_bench"),             # per-kernel
     ("roofline", "benchmarks.roofline"),                # deliverable (g)
 ]
@@ -21,6 +30,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark groups")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="directory to write BENCH_<group>.json files")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
@@ -28,14 +39,24 @@ def main() -> None:
     for key, modname in MODULES:
         if only and key not in only:
             continue
+        group_rows = []
+        group_ok = True
         try:
             mod = __import__(modname, fromlist=["rows"])
             for name, us, derived in mod.rows():
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                group_rows.append({"name": name, "us_per_call": us,
+                                   "derived": derived})
         except Exception as e:  # noqa: BLE001 — report, keep benching
             failed.append((key, e))
+            group_ok = False    # never record a truncated group as clean
             print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+        if args.json and group_rows and group_ok:
+            os.makedirs(args.json, exist_ok=True)
+            path = os.path.join(args.json, f"BENCH_{key}.json")
+            with open(path, "w") as f:
+                json.dump(group_rows, f, indent=1)
     if failed:
         sys.exit(1)
 

@@ -1,5 +1,8 @@
 """§V.D(c) — scalability with increasing device count: latency and
-controller wall-time as the network grows (coordination overhead)."""
+controller wall-time as the network grows (coordination overhead), on both
+the single-layer column model and the per-layer block graph
+(``n_layers > 1`` axis: the controller now places n_layers·(h+2) blocks,
+so per-interval wall-time measures the per-layer coordination cost)."""
 from __future__ import annotations
 
 import time
@@ -7,11 +10,19 @@ import time
 import numpy as np
 
 from benchmarks.paper_setup import paper_blocks, paper_cost, policy_kwargs
-from repro.core import ALL_POLICIES, DeviceNetwork, simulate
+from repro.core import ALL_POLICIES, DeviceNetwork, make_blocks, simulate
+from repro.core.blocks import CostModel
 from repro.core.network import GB
 
 DEVICE_COUNTS = (5, 10, 25, 40)
 N_TOKENS = 200
+
+# per-layer graph axis: smaller horizon — the controller does n_layers x
+# the work per interval, and the wall-time trend is the datum
+LAYER_COUNTS = (1, 4, 8)
+GRAPH_DEVICES = 10
+GRAPH_N_TOKENS = 60
+GRAPH_HEADS = 8
 
 
 def run(seed: int = 7):
@@ -31,11 +42,36 @@ def run(seed: int = 7):
     return out
 
 
+def run_graph(seed: int = 7):
+    """Controller cost vs model depth: n_layers·(h+2) blocks per interval."""
+    out = {}
+    for nl in LAYER_COUNTS:
+        blocks = make_blocks(GRAPH_HEADS, nl)
+        cost = CostModel(d_model=2048, n_heads=GRAPH_HEADS, L0=64,
+                         n_layers=nl, compute_mode="incremental",
+                         layer_mode="graph")
+        net = DeviceNetwork.sample(GRAPH_DEVICES, seed=seed,
+                                   mem_range=(2 * GB, 8 * GB))
+        pol = ALL_POLICIES["resource-aware"](blocks, cost, deadline=0.2)
+        t0 = time.time()
+        res = simulate(pol, blocks, cost, net, GRAPH_N_TOKENS, seed=11)
+        out[nl] = dict(total=res.total_latency,
+                       n_blocks=len(blocks),
+                       controller_ms=(time.time() - t0) / GRAPH_N_TOKENS * 1e3,
+                       migrations=res.migrations)
+    return out
+
+
 def rows():
     out = run()
     for nd, d in out.items():
         yield (f"scalability/devices={nd}", d["controller_ms"] * 1e3,
                f"total_s={d['total']:.1f};migr={d['migrations']}")
+    out = run_graph()
+    for nl, d in out.items():
+        yield (f"scalability/layers={nl}", d["controller_ms"] * 1e3,
+               f"total_s={d['total']:.1f};blocks={d['n_blocks']};"
+               f"migr={d['migrations']}")
 
 
 if __name__ == "__main__":

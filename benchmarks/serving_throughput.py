@@ -107,6 +107,19 @@ def run(n_requests: int = 12, n_slots: int = 4, max_seq: int = 64,
     return results
 
 
+def rows():
+    """benchmarks.run driver hook: tokens/sec per engine + the speedup."""
+    r = run(verbose=False)
+    for name in ("wave", "continuous"):
+        d = r[name]
+        us = d["wall_s"] / max(d["decode_steps"], 1) * 1e6
+        yield (f"serving/{name}", us,
+               f"tok_s={d['tok_per_s']:.1f};requests={d['requests']};"
+               f"slot_util={d['slot_util'] if d['slot_util'] is not None else '-'}")
+    yield ("serving/speedup", 0.0,
+           f"continuous_over_wave={r['speedup']:.2f}x")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)

@@ -15,7 +15,9 @@ cfg = get_config("musicgen-large").with_overrides(
     n_layers=3, d_model=128, d_ff=512, n_heads=8, n_kv_heads=8, d_head=16,
     vocab_size=512, dtype="float32", param_dtype="float32")
 
-# controller prices placements at PRODUCTION dims (full musicgen-large)
+# controller prices placements at PRODUCTION width (full musicgen-large
+# d_model) over the per-layer block graph of the served model's 3 layers —
+# one head permutation per layer
 engine = ServingEngine(cfg, n_slots=4, max_seq=96, lam=6,
                        cost_cfg=get_config("musicgen-large"))
 print(f"engine: {engine.net.n_devices} slots, "
@@ -29,9 +31,9 @@ for i, L in enumerate((6, 12, 9, 17)):
     engine.submit(rng.integers(0, cfg.vocab_size, size=L),
                   max_new_tokens=18 + 4 * (i % 2))
 engine.run()
-busiest = int(np.bincount(engine.controller.place[:-2],
-                          minlength=engine.net.n_devices).argmax())
-before = int((engine.controller.place[:-2] == busiest).sum())
+counts = engine.controller.head_counts()   # heads/device over ALL layers
+busiest = int(counts.argmax())
+before = int(counts[busiest])
 
 # phase 2: the busiest slot becomes a 25x straggler mid-service —
 # the paper's C_j(τ) drop; Algorithm 1 must MIGRATE heads away, permuting
@@ -51,8 +53,7 @@ print(f"slot utilization {util:.0%}, "
 migr = sum(m['n_migrations'] for m in engine.migration_log)
 print(f"controller ran {len(engine.migration_log)} intervals, "
       f"migrated {migr} head-blocks")
-place = engine.controller.place
-after = int((place[:-2] == busiest).sum())
+after = int(engine.controller.head_counts()[busiest])
 print(f"heads on straggler slot {busiest}: {before} -> {after}")
 for r in done[:4]:
     print(f"  req {r.rid}: {len(r.out_tokens)} tokens, "

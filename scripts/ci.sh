@@ -12,3 +12,7 @@ if [[ "${RUN_SLOW_TESTS:-0}" == "1" ]]; then
     python -m pytest -x -q -m "slow" "$@"
 fi
 python -m pytest -x -q "$@"
+
+# benchmark smoke: the tiny-shape exact-solver group must keep running
+# (catches benchmark bit-rot without paying for the full figure sweeps)
+python -m benchmarks.run --only small_scale > /dev/null

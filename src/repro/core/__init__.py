@@ -3,6 +3,7 @@ resource-aware migration for low-latency edge LLM inference."""
 from repro.core.algorithm import AlgoStats, ResourceAwareAssigner  # noqa: F401
 from repro.core.baselines import (  # noqa: F401
     ALL_POLICIES,
+    ColumnCoPartitionPolicy,
     DynamicLayerPolicy,
     EdgeShardPolicy,
     GalaxyPolicy,
@@ -12,7 +13,18 @@ from repro.core.baselines import (  # noqa: F401
     RoundRobinPolicy,
     StaticPolicy,
 )
-from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ, make_blocks  # noqa: F401
+from repro.core.blocks import (  # noqa: F401
+    Block,
+    BlockGraph,
+    CostModel,
+    FFN,
+    HEAD,
+    PROJ,
+    blocks_per_layer,
+    graph_of,
+    make_blocks,
+    replicate_placement,
+)
 from repro.core.delay import (  # noqa: F401
     inference_delay,
     memory_feasible,

@@ -106,9 +106,14 @@ class ResourceAwareAssigner:
             # Load-aware scores: free memory and queued compute on j are
             # subtracted/added (Algorithm 1 line 10's aggregate check, folded
             # into the score so the argmin spreads load instead of stacking
-            # everything on the roomiest device).
+            # everything on the roomiest device).  Counterpart devices for
+            # the comm factor come from the controller's best current
+            # knowledge: this round's tentative placement overlaid on prev
+            # (-1 = still unknown), so even the first interval sees the
+            # links its already-placed proj/ffn/neighbor-layer blocks use.
+            view = place if prev is None else np.where(place >= 0, place, prev)
             raw = np.array([
-                score(bl, j, self.blocks, prev, self.cost, net, tau,
+                score(bl, j, self.blocks, view, self.cost, net, tau,
                       deadline=self.deadline, mem_used=mem_used,
                       compute_used=comp_used) for j in range(V)])
             stats.score_evals += V

@@ -14,17 +14,27 @@ Galaxy     — static hybrid tensor+sequence parallelism: heads and ffn are
   device list); proj is co-located with the fastest device. Models Galaxy's
   tensor-parallel sharding of each shard's matmuls; static during decoding.
 
-Both baselines inherit the *same* delay model — the comparison isolates the
-placement policy, exactly like the paper's simulator.
+On a **per-layer block graph** (``layer_mode="graph"`` / multi-layer
+``make_blocks``) the layer-range baselines place *actual* per-layer blocks
+instead of aggregate math: EdgeShard maps its contiguous layer shards to
+real placements (every block of a stage's layers on the stage device);
+Galaxy spreads each stage's heads over its TP island.  Both are then
+priced by the unified per-layer Eq.-6 delay model — the comparison
+isolates the placement policy, exactly like the paper's simulator.
+``ColumnCoPartitionPolicy`` exposes the old column lift as a policy on the
+same graph, so per-layer head placement can be compared against column
+co-partitioning under identical delay semantics.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.algorithm import ResourceAwareAssigner
-from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ
+from repro.core.blocks import (Block, CostModel, FFN, HEAD, PROJ, graph_of,
+                               make_blocks, replicate_placement)
 from repro.core.network import DeviceNetwork
 
 
@@ -45,21 +55,69 @@ class ResourceAwarePolicy(Policy):
     requires (§III.G: "minimizes D_T(τ) + D_mig(τ)"): each proposed block
     migration is kept only if it lowers the myopic objective — migrations
     whose delay exceeds their latency gain are reverted. Disable with
-    ``migration_filter=False`` for the ablation."""
+    ``migration_filter=False`` for the ablation.
+
+    On per-layer block graphs a bounded best-improvement pass over the same
+    objective follows (``refine_passes``, default 1 when the block list is
+    multi-layer): Algorithm 1's load-aware score spreads same-kind blocks
+    to balance *utilization*, but the layer-composed critical path is a
+    *sum* of per-layer terms, so e.g. every layer's ffn belongs on the
+    fastest feasible device — a move the score never proposes and the
+    refinement finds.  Each refinement move must already pay for its own
+    migration delay (it minimizes D_T + D_mig), the inherent anti-thrash
+    term."""
     name = "resource-aware"
 
     def __init__(self, blocks, cost, *, deadline: float = 5.0,
-                 migration_filter: bool = True, **kw):
+                 migration_filter: bool = True,
+                 refine_passes: Optional[int] = None, **kw):
         super().__init__(blocks, cost)
         self.assigner = ResourceAwareAssigner(blocks, cost,
                                               deadline=deadline, **kw)
         self.migration_filter = migration_filter
+        multi = graph_of(self.blocks).n_layers > 1
+        self.refine_passes = (1 if multi else 0) \
+            if refine_passes is None else refine_passes
+
+    def _refine(self, prev, place, net, tau):
+        """Best-improvement local search on total_delay (memory-feasible
+        single-block moves), at most ``refine_passes`` sweeps."""
+        from repro.core.delay import memory_usage, total_delay
+        cur = place.copy()
+        cur_val = total_delay(prev, cur, self.blocks, self.cost, net, tau)
+        mem = self.cost.memory_vector(self.blocks, tau)
+        use = memory_usage(cur, self.blocks, self.cost, net, tau)
+        for _ in range(self.refine_passes):
+            improved = False
+            for i in range(len(self.blocks)):
+                src = int(cur[i])
+                best_j, best_val = src, cur_val
+                for j in range(net.n_devices):
+                    if j == src or use[j] + mem[i] > net.mem_capacity[j]:
+                        continue
+                    cur[i] = j
+                    val = total_delay(prev, cur, self.blocks, self.cost,
+                                      net, tau)
+                    if val < best_val - 1e-12:
+                        best_j, best_val = j, val
+                cur[i] = best_j
+                if best_j != src:
+                    use[src] -= mem[i]
+                    use[best_j] += mem[i]
+                    cur_val = best_val
+                    improved = True
+            if not improved:
+                break
+        return cur
 
     def place(self, net, tau, prev):
         placement, stats = self.assigner.assign(net, tau, prev)
         self.last_stats = stats
-        if (placement is None or prev is None
-                or not self.migration_filter):
+        if placement is None:
+            return placement
+        if self.refine_passes > 0:
+            placement = self._refine(prev, placement, net, tau)
+        if prev is None or not self.migration_filter:
             return placement
         from repro.core.delay import memory_feasible, total_delay
         current = placement.copy()
@@ -148,28 +206,65 @@ class _PipelinePolicy(Policy):
     Both EdgeShard [1] and Galaxy [3] shard the model by *contiguous layer
     groups*; a single decode token flows through the stages sequentially —
     pipeline parallelism has no intra-token parallelism, which is exactly
-    the weakness the paper exploits.  Subclasses set the stage structure;
-    this class provides the per-step pipeline delay (``step_delay``) and
-    per-device memory (``device_memory``) hooks the simulator consumes,
-    plus the swap-stall overload semantics shared with Eq. 6-based
-    policies.
+    the weakness the paper exploits.  Subclasses set the stage structure.
 
-    Per-layer costs are Table-I sums at n_layers=1 (heads + proj + ffn).
+    Two evaluation modes, keyed off the block list:
+
+    - aggregate (single-layer column blocks): the stage structure cannot
+      be expressed as a block placement, so this class provides its own
+      per-step pipeline delay (``step_delay``) and per-device memory
+      (``device_memory``) hooks the simulator consumes, plus the
+      swap-stall overload semantics shared with Eq. 6-based policies.
+
+    - per-layer graph (multi-layer ``make_blocks``): ``place`` returns the
+      stage structure as an *actual* per-layer block placement
+      (``aggregate_semantics`` is False) and the simulator prices it with
+      the unified per-layer Eq.-6 delay model like every other policy.
+
+    Per-layer costs are Table-I sums over one layer's blocks.
     """
     stages: list  # list of (device_list, n_layers_in_stage)
 
     def __init__(self, blocks, cost, **kw):
         super().__init__(blocks, cost)
-        import dataclasses as _dc
-        self._layer_cost = _dc.replace(cost, n_layers=1)
+        self._graph = graph_of(self.blocks)
+        self.aggregate_semantics = self._graph.n_layers == 1
+        self._layer_cost = dataclasses.replace(cost, n_layers=1)
+        self._layer_blocks = self._graph.layer_blocks(0)
         self.stages = []
+        # graph-mode block placement, computed ONCE with the stages: these
+        # baselines are static during decoding, so the intra-stage layout
+        # must not chase compute_avail fluctuations (that would charge the
+        # static baseline spurious migration delay)
+        self._frozen_place: Optional[np.ndarray] = None
+
+    # stage layout --------------------------------------------------------
+    def _stage_layers(self):
+        """Consecutive layer ranges per stage: [(devs, [layers...])]."""
+        out, nxt = [], 0
+        for devs, n in self.stages:
+            out.append((devs, list(range(nxt, nxt + n))))
+            nxt += n
+        return out
+
+    def _graph_placement(self, net: DeviceNetwork) -> np.ndarray:
+        """Materialize the stage structure as a per-layer block placement
+        (graph mode only).  Subclasses refine intra-stage placement."""
+        place = np.zeros(len(self.blocks), dtype=int)
+        for devs, layer_ids in self._stage_layers():
+            for l in layer_ids:
+                for b in self._graph.layer_blocks(l):
+                    place[b.index] = devs[0]
+        return place
 
     # one layer's aggregate compute / memory ------------------------------
     def _layer_compute(self, tau: int) -> float:
-        return float(sum(self._layer_cost.compute(b, tau) for b in self.blocks))
+        return float(sum(self._layer_cost.compute(b, tau)
+                         for b in self._layer_blocks))
 
     def _layer_memory(self, tau: int) -> float:
-        return float(sum(self._layer_cost.memory(b, tau) for b in self.blocks))
+        return float(sum(self._layer_cost.memory(b, tau)
+                         for b in self._layer_blocks))
 
     def _boundary_bytes(self, tau: int) -> float:
         return self._layer_cost.proj_to_ffn_bytes(tau)  # activations D·b(·L)
@@ -232,6 +327,12 @@ class EdgeShardPolicy(_PipelinePolicy):
             while shares.sum() < L:
                 shares[np.argmax(speeds)] += 1
             self.stages = [([j], int(s)) for j, s in zip(chosen, shares)]
+        if not self.aggregate_semantics:
+            # per-layer graph: the layer shards ARE a block placement —
+            # every block of a stage's layers on the stage device
+            if self._frozen_place is None:
+                self._frozen_place = self._graph_placement(net)
+            return self._frozen_place.copy()
         # representative block-level placement (metrics only): everything on
         # the first stage's device
         return np.full(len(self.blocks), self.stages[0][0][0], dtype=int)
@@ -263,7 +364,54 @@ class GalaxyPolicy(_PipelinePolicy):
             while shares.sum() < L:
                 shares[np.argmax(agg)] += 1
             self.stages = [(g, int(s)) for g, s in zip(groups, shares) if s > 0]
+        if not self.aggregate_semantics:
+            # hybrid TP+PP as real blocks: each stage's heads round-robin
+            # over its island, proj/ffn on the island's fastest member —
+            # frozen with the stages (static during decoding)
+            if self._frozen_place is None:
+                place = np.zeros(len(self.blocks), dtype=int)
+                for devs, layer_ids in self._stage_layers():
+                    fastest = max(devs, key=lambda j: net.compute_avail[j])
+                    for l in layer_ids:
+                        for i, h in enumerate(self._graph.heads[l]):
+                            place[h.index] = devs[i % len(devs)]
+                        place[self._graph.proj[l].index] = fastest
+                        place[self._graph.ffn[l].index] = fastest
+                self._frozen_place = place
+            return self._frozen_place.copy()
         return np.full(len(self.blocks), self.stages[0][0][0], dtype=int)
+
+
+class ColumnCoPartitionPolicy(Policy):
+    """The old ``layer_mode="columns"`` lift expressed as a policy over the
+    per-layer block graph: Algorithm 1 runs on the single-layer column
+    blocks (costs aggregated over all layers), and the resulting column
+    placement is replicated to every layer — head i of *every* layer on one
+    device, one shared proj/ffn device.  Evaluated under the same per-layer
+    delay model as every other graph policy, this is the control arm the
+    per-layer ``ResourceAwarePolicy`` must beat on heterogeneous-bandwidth
+    networks (it cannot adapt placement per layer or shorten inter-layer
+    hops)."""
+    name = "column-copartition"
+
+    def __init__(self, blocks, cost, **kw):
+        super().__init__(blocks, cost)
+        g = graph_of(self.blocks)
+        self._n_per_layer = len(g.layer_blocks(0))
+        col_cost = dataclasses.replace(cost, layer_mode="columns")
+        self._col_blocks = make_blocks(cost.n_heads)
+        self._inner = ResourceAwarePolicy(self._col_blocks, col_cost, **kw)
+
+    def place(self, net, tau, prev):
+        # prev is column-replicated by construction: layer 0's slice is the
+        # column placement
+        prev_col = None if prev is None else \
+            np.asarray(prev[:self._n_per_layer], dtype=int)
+        col = self._inner.place(net, tau, prev_col)
+        self.last_stats = getattr(self._inner, "last_stats", None)
+        if col is None:
+            return None
+        return replicate_placement(col, self.blocks)
 
 
 class LookaheadPolicy(ResourceAwarePolicy):
@@ -334,5 +482,6 @@ class LookaheadPolicy(ResourceAwarePolicy):
 ALL_POLICIES = {
     p.name: p for p in (ResourceAwarePolicy, GreedyPolicy, RoundRobinPolicy,
                         StaticPolicy, DynamicLayerPolicy, EdgeShardPolicy,
-                        GalaxyPolicy, LookaheadPolicy)
+                        GalaxyPolicy, ColumnCoPartitionPolicy,
+                        LookaheadPolicy)
 }

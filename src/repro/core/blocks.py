@@ -19,9 +19,26 @@ Table I (d = D/h, b = bytes/param):
   "incremental" — KV-cache-reusing decode: one new token costs
                   3·D·d + 2·L·d MACs per head (the TPU bridge uses this).
 
+``layer_mode`` — how a multi-layer decoder is lifted from Table I:
+  "columns" — a *block* is the per-head column across all layers (the
+              original aggregate lift): every per-block quantity scales by
+              ``n_layers`` and the block list stays single-layer.  Head i of
+              every layer is forced onto one device; inter-layer transfers
+              are invisible.
+  "graph"   — a true per-layer block graph: ``make_blocks(h, n_layers)``
+              emits head(l,i)/proj(l)/ffn(l) blocks, each priced at its
+              single-layer Table-I cost, with explicit inter-layer edges
+              ffn(l) → head(l+1,·) carrying the full activation L·D·b
+              (``interlayer_bytes``).  The paper notes the algorithm "can be
+              applied independently to each layer" — this mode makes that
+              literal: each layer's heads place independently.
+
+``n_layers=1`` makes the two modes coincide with Table I exactly as printed.
+
 Communication volumes (Eq. 3/4): W_{i→proj} = L·d·b, W_{proj→ffn} = L·D·b
 ("paper"); incremental mode sends only the new token's activations
-(d·b and D·b).
+(d·b and D·b).  The inter-layer edge carries the same volume as
+W_{proj→ffn} — the full hidden state entering the next layer.
 """
 from __future__ import annotations
 
@@ -32,36 +49,143 @@ FFN = "ffn"
 PROJ = "proj"
 HEAD = "head"
 
+LAYER_MODES = ("columns", "graph")
+
 
 @dataclasses.dataclass(frozen=True)
 class Block:
-    index: int           # position in the block list
+    index: int           # position in the (layer-major) block list
     kind: str            # head | ffn | proj
     head_id: int = -1    # for kind == head
+    layer: int = 0       # decoder layer this block belongs to
 
     @property
     def name(self) -> str:
-        return f"head{self.head_id}" if self.kind == HEAD else self.kind
+        base = f"head{self.head_id}" if self.kind == HEAD else self.kind
+        return base if self.layer == 0 else f"l{self.layer}:{base}"
 
 
-def make_blocks(n_heads: int) -> List[Block]:
-    blocks = [Block(i, HEAD, head_id=i) for i in range(n_heads)]
-    blocks.append(Block(n_heads, PROJ))
-    blocks.append(Block(n_heads + 1, FFN))
+def blocks_per_layer(n_heads: int) -> int:
+    return n_heads + 2
+
+
+def make_blocks(n_heads: int, n_layers: int = 1) -> List[Block]:
+    """Layer-major block list: layer l holds heads 0..h-1, proj(l), ffn(l).
+
+    ``n_layers=1`` (the default) reproduces the original single-layer list
+    bit-for-bit — same indices, same order, layer 0 throughout.
+    """
+    blocks: List[Block] = []
+    per = blocks_per_layer(n_heads)
+    for l in range(n_layers):
+        base = l * per
+        for i in range(n_heads):
+            blocks.append(Block(base + i, HEAD, head_id=i, layer=l))
+        blocks.append(Block(base + n_heads, PROJ, layer=l))
+        blocks.append(Block(base + n_heads + 1, FFN, layer=l))
     return blocks
+
+
+class BlockGraph:
+    """Layer-indexed view of a block list plus the inter-layer edges.
+
+    ``edges`` lists the explicit ffn(l) → head(l+1, i) activation edges the
+    per-layer delay/scoring models price (volume:
+    ``CostModel.interlayer_bytes``).
+    """
+
+    def __init__(self, blocks: Sequence[Block]):
+        # keep the caller's list object when possible: graph_of's cache is
+        # keyed by id(list) and guarded by `g.blocks is blocks`
+        if not isinstance(blocks, list):
+            blocks = list(blocks)
+        self.blocks = blocks
+        self.n_layers = max(b.layer for b in blocks) + 1
+        self.heads: List[List[Block]] = [[] for _ in range(self.n_layers)]
+        self.proj: List[Block] = [None] * self.n_layers  # type: ignore
+        self.ffn: List[Block] = [None] * self.n_layers   # type: ignore
+        for b in blocks:
+            if b.kind == HEAD:
+                self.heads[b.layer].append(b)
+            elif b.kind == PROJ:
+                if self.proj[b.layer] is not None:
+                    raise ValueError(f"duplicate proj in layer {b.layer}")
+                self.proj[b.layer] = b
+            else:
+                if self.ffn[b.layer] is not None:
+                    raise ValueError(f"duplicate ffn in layer {b.layer}")
+                self.ffn[b.layer] = b
+        for l in range(self.n_layers):
+            if not self.heads[l] or self.proj[l] is None \
+                    or self.ffn[l] is None:
+                raise ValueError(f"layer {l} is missing blocks")
+
+    def layer_blocks(self, l: int) -> List[Block]:
+        return self.heads[l] + [self.proj[l], self.ffn[l]]
+
+    @property
+    def edges(self):
+        """Inter-layer activation edges (ffn(l), head(l+1, i))."""
+        return [(self.ffn[l], h)
+                for l in range(self.n_layers - 1)
+                for h in self.heads[l + 1]]
+
+
+# Keyed by (id, len) with a strong reference to the list held in the value:
+# while an entry lives, its list's id cannot be reused, so the key cannot
+# alias a different list.  Bounded: cleared wholesale if it ever grows past
+# a size no realistic process reaches organically.
+_GRAPH_CACHE: dict = {}
+
+
+def graph_of(blocks: Sequence[Block]) -> BlockGraph:
+    blocks = blocks if isinstance(blocks, list) else list(blocks)
+    key = (id(blocks), len(blocks))
+    g = _GRAPH_CACHE.get(key)
+    if g is not None and g.blocks is blocks:
+        return g
+    g = BlockGraph(blocks)
+    if len(_GRAPH_CACHE) > 256:
+        _GRAPH_CACHE.clear()
+    _GRAPH_CACHE[key] = g
+    return g
+
+
+def replicate_placement(col_place, blocks: Sequence[Block]):
+    """Lift a single-layer (column) placement onto a per-layer block list:
+    head(l,i) ← col_place[head i], proj(l)/ffn(l) ← col_place[proj/ffn].
+
+    This is exactly what ``layer_mode="columns"`` forces implicitly — the
+    explicit form lets column co-partitioning be evaluated (and beaten)
+    under the per-layer delay model."""
+    import numpy as np
+    g = graph_of(blocks)
+    col = np.asarray(col_place, dtype=int)
+    out = np.empty(len(g.blocks), dtype=int)
+    n_heads = len(g.heads[0])
+    for l in range(g.n_layers):
+        for h in g.heads[l]:
+            out[h.index] = col[h.head_id]
+        out[g.proj[l].index] = col[n_heads]
+        out[g.ffn[l].index] = col[n_heads + 1]
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
-    """Table-I resource usage for a single decoder layer.
+    """Table-I resource usage for an ``n_layers``-deep decoder.
 
-    ``n_layers`` extends the single-layer model to the paper's "GPT-2/LLaMA
-    scale" evaluation (§V.B): a *block* becomes the per-head column across
-    all layers (the paper notes the approach "can be applied independently
-    to each layer"; co-partitioning the columns is the natural multi-layer
-    lift and is what reproduces the paper's GB-scale memory figures —
-    EXPERIMENTS.md §Reproduction notes).  All memory/compute/communication
-    volumes scale by n_layers; n_layers=1 is Table I exactly as printed.
+    ``layer_mode="columns"`` is the original aggregate lift (§V.B, the
+    paper's "GPT-2/LLaMA scale" evaluation): a *block* is the per-head
+    column across all layers, so memory/compute/communication volumes all
+    scale by ``n_layers`` and the block list stays single-layer
+    (EXPERIMENTS.md §Reproduction notes).
+
+    ``layer_mode="graph"`` prices each block at its single-layer Table-I
+    cost; the multi-layer structure lives in the block list
+    (``make_blocks(h, n_layers)``) and the per-layer delay model instead.
+
+    ``n_layers=1`` makes both modes Table I exactly as printed.
     """
 
     d_model: int                 # D
@@ -73,13 +197,31 @@ class CostModel:
     cache_mode: str = "paper"
     compute_mode: str = "paper"
     flops_per_mac: int = 2       # Table I counts MACs; FLOPs = 2x
+    layer_mode: str = "columns"
+
+    def __post_init__(self):
+        if self.layer_mode not in LAYER_MODES:
+            raise ValueError(f"layer_mode must be one of {LAYER_MODES}, "
+                             f"got {self.layer_mode!r}")
 
     @property
     def d_head(self) -> int:
         return self.d_model // self.n_heads
 
+    @property
+    def _scale(self) -> int:
+        """Per-block multiplier: columns aggregate all layers into each
+        block; graph blocks are single-layer."""
+        return 1 if self.layer_mode == "graph" else self.n_layers
+
     def seq_len(self, tau: int) -> int:
         return self.L0 + self.lam * tau
+
+    def make_blocks(self) -> List[Block]:
+        """The block list this cost model prices: per-layer in graph mode,
+        the single-layer column list otherwise."""
+        return make_blocks(self.n_heads,
+                           self.n_layers if self.layer_mode == "graph" else 1)
 
     # ----------------------------------------------------------- memory
     def memory(self, block: Block, tau: int) -> float:
@@ -91,16 +233,16 @@ class CostModel:
                 cache = tau * D * b
             else:
                 cache = 2 * tau * d * b
-            return float(self.n_layers * (base + cache))
+            return float(self._scale * (base + cache))
         if block.kind == PROJ:
-            return float(self.n_layers * L * D * b)
-        return float(self.n_layers * 4 * L * D * b)  # ffn
+            return float(self._scale * L * D * b)
+        return float(self._scale * 4 * L * D * b)  # ffn
 
     # ----------------------------------------------------------- compute
     def compute(self, block: Block, tau: int) -> float:
         D, d = self.d_model, self.d_head
         L = self.seq_len(tau)
-        f = self.flops_per_mac * self.n_layers
+        f = self.flops_per_mac * self._scale
         if self.compute_mode == "paper":
             if block.kind == HEAD:
                 return float(f * (3 * L * D * d + L * L * d))
@@ -120,13 +262,21 @@ class CostModel:
         d, b = self.d_head, self.bytes_per_param
         L = self.seq_len(tau)
         n = L if self.compute_mode == "paper" else self.lam
-        return float(self.n_layers * n * d * b)
+        return float(self._scale * n * d * b)
 
     def proj_to_ffn_bytes(self, tau: int) -> float:
         D, b = self.d_model, self.bytes_per_param
         L = self.seq_len(tau)
         n = L if self.compute_mode == "paper" else self.lam
-        return float(self.n_layers * n * D * b)
+        return float(self._scale * n * D * b)
+
+    def interlayer_bytes(self, tau: int) -> float:
+        """Volume of one ffn(l) → head(l+1,·) edge: the full hidden state
+        entering the next layer (L·D·b; incremental mode sends only the λ
+        new tokens' activations).  Per-edge — never scaled by n_layers."""
+        D, b = self.d_model, self.bytes_per_param
+        n = self.seq_len(tau) if self.compute_mode == "paper" else self.lam
+        return float(n * D * b)
 
     def input_bytes(self, tau: int) -> float:
         """Controller -> head-device token embeddings."""

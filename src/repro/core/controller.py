@@ -7,6 +7,13 @@ Unifies the two runtimes:
    Algorithm 1's placement becomes a head permutation (placement_bridge)
    and the migration plan is applied to the cache between decode steps —
    in the λ-interval slack, exactly where the paper schedules migrations.
+
+With a ``layer_mode="graph"`` cost model the controller places the full
+per-layer block graph and emits **one head permutation per layer**
+(``plan["perms"]``, shape (n_layers, n_slots·heads_per_slot)), so a
+stacked KV cache is permuted layer-by-layer and head(l,i) can sit on a
+different device than head(l',i).  ``plan["perm"]``/``plan["prev_perm"]``
+remain the layer-0 rows for single-layer callers.
 """
 from __future__ import annotations
 
@@ -19,8 +26,10 @@ from repro.core.algorithm import ResourceAwareAssigner
 from repro.core.blocks import Block, CostModel, make_blocks
 from repro.core.delay import migration_delay, total_delay
 from repro.core.network import DeviceNetwork
-from repro.core.placement_bridge import (apply_head_perm, migration_pairs,
-                                         placement_to_perm)
+from repro.core.placement_bridge import (apply_head_perm,
+                                         apply_layer_head_perms,
+                                         migration_pairs_layers,
+                                         placement_to_perms, relative_perms)
 
 
 @dataclasses.dataclass
@@ -36,7 +45,8 @@ class IntervalController:
 
     def __init__(self, n_heads: int, cost: CostModel, net: DeviceNetwork,
                  cfg: ControllerConfig = ControllerConfig()):
-        self.blocks: List[Block] = make_blocks(n_heads)
+        self.n_layers = cost.n_layers if cost.layer_mode == "graph" else 1
+        self.blocks: List[Block] = make_blocks(n_heads, self.n_layers)
         self.cost = cost
         self.net = net
         self.cfg = cfg
@@ -45,9 +55,21 @@ class IntervalController:
         self.assigner = ResourceAwareAssigner(self.blocks, cost,
                                               deadline=cfg.deadline * cfg.lam)
         self.place: Optional[np.ndarray] = None
-        self.perm: Optional[np.ndarray] = None
+        self.perms: Optional[np.ndarray] = None   # (n_layers, slots·hps)
         self.tau = 0
         self.history: List[dict] = []
+
+    @property
+    def perm(self) -> Optional[np.ndarray]:
+        """Layer-0 permutation (single-layer backward compatibility)."""
+        return None if self.perms is None else self.perms[0]
+
+    def head_counts(self, place: Optional[np.ndarray] = None) -> np.ndarray:
+        """Heads per device, summed over layers."""
+        place = self.place if place is None else place
+        heads = [b.index for b in self.blocks if b.kind == "head"]
+        return np.bincount(np.asarray(place)[heads],
+                           minlength=self.net.n_devices)
 
     # ------------------------------------------------------------ observe
     def observe(self, compute_avail: Optional[np.ndarray] = None,
@@ -87,29 +109,39 @@ class IntervalController:
                 if val <= cur_val - self.cfg.min_gain:
                     place, cur_val = trial, val
         n_slots = self.net.n_devices
-        new_perm = placement_to_perm(place, self.blocks, n_slots,
-                                     self.cfg.heads_per_slot)
-        pairs = [] if self.perm is None else \
-            migration_pairs(self.perm, new_perm, self.cfg.heads_per_slot)
+        new_perms = placement_to_perms(place, self.blocks, n_slots,
+                                       self.cfg.heads_per_slot)
+        pairs = [] if self.perms is None else \
+            migration_pairs_layers(self.perms, new_perms,
+                                   self.cfg.heads_per_slot)
         d_mig = migration_delay(prev, place, self.blocks, self.cost,
                                 self.net, self.tau)
-        plan = {"tau": self.tau, "place": place, "perm": new_perm,
-                "prev_perm": self.perm, "migrations": pairs,
+        plan = {"tau": self.tau, "place": place,
+                "perms": new_perms, "prev_perms": self.perms,
+                "perm": new_perms[0],
+                "prev_perm": None if self.perms is None else self.perms[0],
+                "migrations": pairs,
                 "d_mig_est": d_mig, "infeasible": stats.infeasible}
-        self.place, self.perm = place, new_perm
+        self.place, self.perms = place, new_perms
         self.history.append({"tau": self.tau, "n_migrations": len(pairs),
                              "d_mig_est": d_mig,
                              "infeasible": stats.infeasible})
         return plan
 
     # ---------------------------------------------------------------- act
-    def apply_to_cache(self, cache_k, cache_v, plan, head_axis: int = 3):
-        """Execute the migration plan on a head-expanded KV cache: a gather
-        by the *relative* permutation (new layout in terms of current
-        positions), which lowers to collective-permute between slots."""
-        prev_perm = plan.get("prev_perm")
-        if prev_perm is None or not plan["migrations"]:
+    def apply_to_cache(self, cache_k, cache_v, plan, head_axis: int = 3,
+                       layer_axis: int = 0):
+        """Execute the migration plan on a layer-stacked head-expanded KV
+        cache: per-layer gathers by the *relative* permutations (new layout
+        in terms of current positions), which lower to collective-permute
+        between slots.  The cache's ``layer_axis`` must cover the
+        controller's ``n_layers`` (a single-layer plan broadcasts over it)."""
+        prev_perms = plan.get("prev_perms")
+        if prev_perms is None or not plan["migrations"]:
             return cache_k, cache_v
-        old_pos = {int(h): i for i, h in enumerate(prev_perm)}
-        rel = np.array([old_pos[int(h)] for h in plan["perm"]])
-        return apply_head_perm(cache_k, cache_v, rel, head_axis)
+        rel = relative_perms(prev_perms, plan["perms"])
+        if rel.shape[0] == 1:  # single-layer plan: same perm for all layers
+            return apply_head_perm(cache_k, cache_v, rel[0], head_axis)
+        return apply_layer_head_perms(cache_k, cache_v, rel,
+                                      layer_axis=layer_axis,
+                                      head_axis=head_axis)

@@ -1,22 +1,45 @@
-"""Delay model — Eq. (2)–(7) of the paper.
+"""Delay model — Eq. (2)–(7) of the paper, generalized to a per-layer
+block graph.
 
 A placement is an int array ``place[block_index] -> device``.
 
-Total inference delay at interval τ (Eq. 6, with the natural completion of
-the pipeline: proj and ffn processing included — the paper's equation lists
-the communication terms explicitly and §III.E(b) defines processing delays
-for *every* block; ``strict_eq6=True`` reproduces the bare printed form):
+Single layer (Eq. 6, with the natural completion of the pipeline: proj and
+ffn processing included — the paper's equation lists the communication
+terms explicitly and §III.E(b) defines processing delays for *every*
+block; ``strict_eq6=True`` reproduces the bare printed form):
 
   D_T = max_{i∈H}( D_in→d(i) + D_proc(i) + D_{d(i)→d(proj)} )
         [+ D_proc(proj)] + D_{d(proj)→d(ffn)} [+ D_proc(ffn)]
 
-Concurrency semantics (§III.E/F):
- - compute: blocks co-located on a device run sequentially — a head's
-   processing term uses the *sum* of head compute on its device;
- - links: transfers sharing a directed link (j,k) are serialized — each
-   head's comm term uses the summed volume on its link.
+Multi-layer (``make_blocks(h, n_layers)`` graphs): one decode token
+traverses the layers sequentially — there is no intra-token pipelining —
+so the total is the layer-composed critical path
 
-Migration (Eq. 2/7): D_mig = Σ_i m_i(τ-1)/R_{j,k}(τ), serialized per link.
+  D_T = Σ_l D_layer(l)
+
+where D_layer(l) is Eq. 6 applied to layer l's blocks with layer l's input
+stage replaced by the inter-layer edge: layer 0's heads receive the token
+embeddings from the controller (``input_bytes``), layer l>0's heads
+receive the previous layer's output from d(ffn(l-1))
+(``interlayer_bytes``).  Because the layers execute back-to-back, every
+directed link serializes all layers' transfers and every device runs all
+layers' resident blocks sequentially — the cross-layer sharing shows up as
+the Σ_l composition, and the intra-layer sharing as Eq. 6's per-link /
+per-device sums.  With n_layers=1 the loop body is the original Eq. 6
+arithmetic, bit-for-bit.
+
+Concurrency semantics (§III.E/F), per layer:
+ - compute: blocks co-located on a device run sequentially — a head's
+   processing term uses the *sum* of that layer's head compute on its
+   device;
+ - links: transfers sharing a directed link (j,k) are serialized — each
+   head's comm term uses the summed volume on its link.  The inter-layer
+   broadcast is one transfer per destination device (co-located heads
+   share it), matching the controller-input convention.
+
+Migration (Eq. 2/7): D_mig = Σ_i m_i(τ-1)/R_{j,k}(τ), serialized per link
+— unchanged: per-layer blocks each contribute their single-layer
+footprint.
 """
 from __future__ import annotations
 
@@ -24,7 +47,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ
+from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ, graph_of
 from repro.core.network import DeviceNetwork
 
 
@@ -37,37 +60,45 @@ def _rate(net: DeviceNetwork, j: int, k: int) -> float:
 def inference_delay(place: np.ndarray, blocks: Sequence[Block],
                     cost: CostModel, net: DeviceNetwork, tau: int,
                     *, strict_eq6: bool = False) -> float:
-    """D_T(τ) per Eq. 6 for placement ``place``."""
-    heads = [b for b in blocks if b.kind == HEAD]
-    proj = next(b for b in blocks if b.kind == PROJ)
-    ffn = next(b for b in blocks if b.kind == FFN)
-    d_proj, d_ffn = int(place[proj.index]), int(place[ffn.index])
-
-    # per-device summed head compute (sequential sharing)
-    head_compute_on = np.zeros(net.n_devices)
-    for h in heads:
-        head_compute_on[place[h.index]] += cost.compute(h, tau)
-    # per-link summed head->proj volume (serialized sharing)
-    vol_to_proj = np.zeros(net.n_devices)
-    w_head = cost.head_to_proj_bytes(tau)
-    for h in heads:
-        vol_to_proj[place[h.index]] += w_head
-
-    worst = 0.0
+    """D_T(τ) for placement ``place``: Eq. 6 per layer, composed along the
+    inter-layer edges (see module docstring)."""
+    g = graph_of(blocks)
+    total = 0.0
+    src_dev = net.controller              # layer 0: token embeddings
     w_in = cost.input_bytes(tau)
-    for h in heads:
-        j = int(place[h.index])
-        t_in = w_in / _rate(net, net.controller, j)
-        t_proc = head_compute_on[j] / net.compute_avail[j]
-        t_out = vol_to_proj[j] / _rate(net, j, d_proj)
-        worst = max(worst, t_in + t_proc + t_out)
+    w_head = cost.head_to_proj_bytes(tau)
+    for l in range(g.n_layers):
+        heads = g.heads[l]
+        d_proj = int(place[g.proj[l].index])
+        d_ffn = int(place[g.ffn[l].index])
 
-    total = worst
-    if not strict_eq6:
-        total += cost.compute(proj, tau) / net.compute_avail[d_proj]
-    total += cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn)
-    if not strict_eq6:
-        total += cost.compute(ffn, tau) / net.compute_avail[d_ffn]
+        # per-device summed head compute (sequential sharing)
+        head_compute_on = np.zeros(net.n_devices)
+        for h in heads:
+            head_compute_on[place[h.index]] += cost.compute(h, tau)
+        # per-link summed head->proj volume (serialized sharing)
+        vol_to_proj = np.zeros(net.n_devices)
+        for h in heads:
+            vol_to_proj[place[h.index]] += w_head
+
+        worst = 0.0
+        for h in heads:
+            j = int(place[h.index])
+            t_in = w_in / _rate(net, src_dev, j)
+            t_proc = head_compute_on[j] / net.compute_avail[j]
+            t_out = vol_to_proj[j] / _rate(net, j, d_proj)
+            worst = max(worst, t_in + t_proc + t_out)
+
+        total += worst
+        if not strict_eq6:
+            total += cost.compute(g.proj[l], tau) / net.compute_avail[d_proj]
+        total += cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn)
+        if not strict_eq6:
+            total += cost.compute(g.ffn[l], tau) / net.compute_avail[d_ffn]
+
+        # the next layer's heads read this layer's output from d(ffn(l))
+        src_dev = d_ffn
+        w_in = cost.interlayer_bytes(tau)
     return float(total)
 
 

@@ -21,11 +21,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.blocks import Block, HEAD
+from repro.core.blocks import Block, HEAD, graph_of
 
 
 # ---------------------------------------------------------------------------
-# Algorithm-1 placement -> head permutation
+# Algorithm-1 placement -> head permutation (one per layer)
 # ---------------------------------------------------------------------------
 
 
@@ -66,6 +66,18 @@ def placement_to_perm(place: np.ndarray, blocks: Sequence[Block],
     return out
 
 
+def placement_to_perms(place: np.ndarray, blocks: Sequence[Block],
+                       n_slots: int, heads_per_slot: int) -> np.ndarray:
+    """Per-layer head permutations for a (possibly multi-layer) block
+    graph: row l is ``placement_to_perm`` applied to layer l's blocks.
+    Shape (n_layers, n_slots·heads_per_slot); a single-layer list yields
+    one row, identical to ``placement_to_perm``."""
+    g = graph_of(blocks)
+    return np.stack([placement_to_perm(place, g.layer_blocks(l),
+                                       n_slots, heads_per_slot)
+                     for l in range(g.n_layers)])
+
+
 def migration_pairs(old_perm: np.ndarray, new_perm: np.ndarray,
                     heads_per_slot: int) -> List[Tuple[int, int, int]]:
     """(head, src_slot, dst_slot) for every head whose slot changes."""
@@ -78,6 +90,38 @@ def migration_pairs(old_perm: np.ndarray, new_perm: np.ndarray,
     return out
 
 
+def migration_pairs_layers(old_perms: np.ndarray, new_perms: np.ndarray,
+                           heads_per_slot: int
+                           ) -> List[Tuple[int, int, int, int]]:
+    """(layer, head, src_slot, dst_slot) over all layers' permutations."""
+    out: List[Tuple[int, int, int, int]] = []
+    for l, (op, np_) in enumerate(zip(old_perms, new_perms)):
+        out.extend((l, h, s, d)
+                   for h, s, d in migration_pairs(op, np_, heads_per_slot))
+    return out
+
+
+def relative_perms(prev_perms: np.ndarray, new_perms: np.ndarray
+                   ) -> np.ndarray:
+    """Per-layer relative permutations: row l maps the *current* physical
+    layout (prev_perms[l]) onto the new one — ``take``-ing a cache/weight
+    head axis by row l realizes layer l's migration.  Accepts (L, H) stacks
+    or single (H,) permutations (returned as shape (1, H))."""
+    prev_perms = np.atleast_2d(np.asarray(prev_perms))
+    new_perms = np.atleast_2d(np.asarray(new_perms))
+    if prev_perms.shape[0] == 1 and new_perms.shape[0] > 1:
+        # one physical layout shared by all layers
+        prev_perms = np.broadcast_to(prev_perms, new_perms.shape)
+    if prev_perms.shape != new_perms.shape:
+        raise ValueError(f"perm stacks disagree: {prev_perms.shape} vs "
+                         f"{new_perms.shape}")
+    out = np.empty_like(new_perms)
+    for l, (pp, np_) in enumerate(zip(prev_perms, new_perms)):
+        old_pos = {int(h): i for i, h in enumerate(pp)}
+        out[l] = [old_pos[int(h)] for h in np_]
+    return out
+
+
 def apply_head_perm(cache_k, cache_v, perm, head_axis: int = 3):
     """Reorders the expanded-KV head axis of a stacked cache
     ((L, B, T, KvE, dh) by default).  Under a head-sharded mesh this gather
@@ -86,6 +130,23 @@ def apply_head_perm(cache_k, cache_v, perm, head_axis: int = 3):
     idx = jnp.asarray(perm)
     return (jnp.take(cache_k, idx, axis=head_axis),
             jnp.take(cache_v, idx, axis=head_axis))
+
+
+def apply_layer_head_perms(cache_k, cache_v, perms, *, layer_axis: int = 0,
+                           head_axis: int = 3):
+    """Per-layer reorder of a stacked cache ((L, B, T, KvE, dh) by default):
+    row l of ``perms`` permutes layer l's head axis.  Under a head-sharded
+    mesh each row lowers to collective-permute / all-to-all between slots —
+    the physical per-layer migration."""
+    idx = jnp.asarray(perms)
+
+    def take(c):
+        shape = [1] * c.ndim
+        shape[layer_axis % c.ndim] = idx.shape[0]
+        shape[head_axis % c.ndim] = idx.shape[1]
+        return jnp.take_along_axis(c, idx.reshape(shape),
+                                   axis=head_axis % c.ndim)
+    return take(cache_k), take(cache_v)
 
 
 def migration_bytes(pairs: Sequence[Tuple[int, int, int]],
@@ -118,6 +179,47 @@ def permute_model_heads(params, perm, *, has_bias: bool = False):
                     for b in ("bq", "bk", "bv"):
                         if b in v:
                             a[b] = jnp.take(v[b], idx, axis=-2)
+                    out[k] = a
+                else:
+                    out[k] = visit(v)
+            return out
+        return tree
+
+    return visit(params)
+
+
+def permute_model_heads_layers(params, perms, *, has_bias: bool = False):
+    """Per-layer physical head relocation: row l of ``perms`` permutes the
+    head axis of layer l's attention weights.  Requires layer-stacked attn
+    params with the layer axis leading (the dense transformer's
+    ``params["layers"]`` layout).  Attention is permutation-equivariant
+    over heads *within each layer* (wo sums over them), so any combination
+    of per-layer permutations leaves the model function bit-identical —
+    only which chip holds which (layer, head) changes.  MHA layouts only
+    (KvE == Hp, rep == 1); GQA archs migrate at group granularity.
+    """
+    idx = jnp.asarray(perms)
+
+    def take(w, axis):
+        axis = axis % w.ndim
+        shape = [1] * w.ndim
+        shape[0] = idx.shape[0]
+        shape[axis] = idx.shape[1]
+        return jnp.take_along_axis(w, idx.reshape(shape), axis=axis)
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k == "attn" and isinstance(v, dict):
+                    a = dict(v)
+                    a["wq"] = take(v["wq"], -2)
+                    a["wk"] = take(v["wk"], -2)
+                    a["wv"] = take(v["wv"], -2)
+                    a["wo"] = take(v["wo"], -3)
+                    for b in ("bq", "bk", "bv"):
+                        if b in v:
+                            a[b] = take(v[b], -2)
                     out[k] = a
                 else:
                     out[k] = visit(v)

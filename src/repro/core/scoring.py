@@ -1,4 +1,4 @@
-"""Scoring function S(i,j,τ) — paper §IV.A(a).
+"""Scoring function S(i,j,τ) — paper §IV.A(a), generalized per-layer.
 
   S(i,j,τ) = max{ m_i(τ)/M_j(τ),  b_i(τ)/C_j(τ)·(1/T_budget),  CommFactor }
 
@@ -11,10 +11,12 @@ The paper leaves two scalings implicit; we make them explicit and testable:
    default 5 s, exposed as a parameter and swept in the tests).
 
  - CommFactor(i,j,τ) "approximates data transfer times if i must exchange
-   information with blocks on different devices": for a head it is the
-   transfer time of its output to proj's current device plus the input
-   delivery from the controller; for proj, max of inbound-head and
-   outbound-ffn transfers; for ffn, the inbound transfer — all normalized by
+   information with blocks on different devices".  On a per-layer block
+   graph every counterpart is layer-local except the inter-layer edges:
+   head(l,i) receives its input from ffn(l-1) (the controller for l=0) and
+   sends to proj(l); proj(l) takes the max of inbound-head and
+   outbound-ffn transfers; ffn(l) the max of the inbound transfer and the
+   outbound ffn(l) → head(l+1,·) activation broadcast — all normalized by
    the same deadline.  Counterpart devices are read from the *previous*
    placement (the controller's best current knowledge).
 """
@@ -24,7 +26,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ
+from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ, graph_of
 from repro.core.network import DeviceNetwork
 
 
@@ -34,26 +36,52 @@ def comm_factor(block: Block, j: int, blocks: Sequence[Block],
     def rate(a, b):
         return np.inf if a == b else float(net.bandwidth[a, b])
 
-    if prev_place is None:
-        # before the first placement only the controller's link is known
-        if block.kind == HEAD:
-            return cost.input_bytes(tau) / rate(net.controller, j) / deadline
-        return 0.0
-    proj_dev = int(prev_place[next(b.index for b in blocks if b.kind == PROJ)])
-    ffn_dev = int(prev_place[next(b.index for b in blocks if b.kind == FFN)])
+    g = graph_of(blocks)
+    l = block.layer
+
+    def dev(b: Block) -> int:
+        """Counterpart device, -1 when unknown.  ``prev_place`` may be a
+        partial view (entries -1): the assigner overlays its tentative
+        in-round placement on the previous interval's — the controller's
+        best current knowledge (§IV.A(a)) — so the first interval is not
+        comm-blind for counterparts already placed this round."""
+        if prev_place is None:
+            return -1
+        return int(prev_place[b.index])
+
     if block.kind == HEAD:
-        t = cost.input_bytes(tau) / rate(net.controller, j)
-        t += cost.head_to_proj_bytes(tau) / rate(j, proj_dev)
+        t = 0.0
+        if l == 0:
+            t += cost.input_bytes(tau) / rate(net.controller, j)
+        else:
+            src = dev(g.ffn[l - 1])
+            if src >= 0:
+                t += cost.interlayer_bytes(tau) / rate(src, j)
+        proj_dev = dev(g.proj[l])
+        if proj_dev >= 0:
+            t += cost.head_to_proj_bytes(tau) / rate(j, proj_dev)
         return t / deadline
     if block.kind == PROJ:
+        head_devs = set(d for d in (dev(h) for h in g.heads[l]) if d >= 0)
         t_in = cost.head_to_proj_bytes(tau) * cost.n_heads  # worst-case inbound
-        t = max(t_in / min(rate(h_dev, j) for h_dev in
-                           set(int(prev_place[b.index]) for b in blocks
-                               if b.kind == HEAD)),
-                cost.proj_to_ffn_bytes(tau) / rate(j, ffn_dev))
+        t = 0.0
+        if head_devs:
+            t = t_in / min(rate(h_dev, j) for h_dev in head_devs)
+        ffn_dev = dev(g.ffn[l])
+        if ffn_dev >= 0:
+            t = max(t, cost.proj_to_ffn_bytes(tau) / rate(j, ffn_dev))
         return t / deadline
-    # ffn
-    return cost.proj_to_ffn_bytes(tau) / rate(proj_dev, j) / deadline
+    # ffn: inbound from proj(l), outbound broadcast to layer l+1's heads
+    t = 0.0
+    proj_dev = dev(g.proj[l])
+    if proj_dev >= 0:
+        t = cost.proj_to_ffn_bytes(tau) / rate(proj_dev, j)
+    if l + 1 < g.n_layers:
+        next_devs = [rate(j, d) for d in (dev(h) for h in g.heads[l + 1])
+                     if d >= 0]
+        if next_devs:
+            t = max(t, cost.interlayer_bytes(tau) / min(next_devs))
+    return t / deadline
 
 
 def score(block: Block, j: int, blocks: Sequence[Block],

@@ -92,9 +92,13 @@ def simulate(policy: Policy, blocks: Sequence[Block], cost: CostModel,
         if infeasible:
             place = prev if prev is not None else \
                 np.zeros(len(blocks), dtype=int)
-        if hasattr(policy, "step_delay"):
-            # pipeline baselines (EdgeShard/Galaxy) carry their own delay
-            # and memory semantics (baselines._PipelinePolicy)
+        if hasattr(policy, "step_delay") and \
+                getattr(policy, "aggregate_semantics", True):
+            # aggregate pipeline baselines (EdgeShard/Galaxy on the
+            # single-layer column model) carry their own delay and memory
+            # semantics (baselines._PipelinePolicy); on a per-layer block
+            # graph they emit real placements and fall through to the
+            # unified per-layer delay model below
             d_mig = 0.0
             d_inf = policy.step_delay(net, tau)
             use = policy.device_memory(net, tau)

@@ -2,11 +2,15 @@
 
 ``exact_myopic``  — exhaustive search over all |V|^|B| placements at one
 interval, minimizing D_T(τ) + D_mig(τ) under the memory constraint: the
-optimal *myopic* decision the heuristic approximates.
+optimal *myopic* decision the heuristic approximates.  Enumerable only up
+to ``MAX_MYOPIC_PLACEMENTS`` (= 10^6) placements; larger instances —
+which per-layer block graphs reach quickly, |B| = n_layers·(h+2) — raise
+``ValueError`` instead of hanging combinatorially.
 
 ``exact_horizon`` — full-horizon DP over (interval, placement) when a priori
 resource knowledge is assumed (§III.G), used only for very small instances;
-the state space is |V|^|B| per stage.
+the state space is |V|^|B| per stage and each stage is O(states²), so the
+cap is the tighter ``MAX_HORIZON_STATES`` (= 4096 states).
 """
 from __future__ import annotations
 
@@ -19,6 +23,19 @@ from repro.core.blocks import Block, CostModel
 from repro.core.delay import memory_feasible, total_delay
 from repro.core.network import DeviceNetwork
 
+MAX_MYOPIC_PLACEMENTS = 1_000_000
+MAX_HORIZON_STATES = 4096
+
+
+def _check_enumerable(n_blocks: int, n_devices: int, limit: int, who: str):
+    """Refuse instances whose |V|^|B| enumeration exceeds ``limit``."""
+    if n_devices ** n_blocks > limit:
+        raise ValueError(
+            f"{who}: |V|^|B| = {n_devices}^{n_blocks} placements exceed the "
+            f"enumerable limit of {limit}. Exact solvers only cover small "
+            f"layer counts — per-layer graphs have |B| = n_layers*(h+2); "
+            f"use ResourceAwareAssigner for larger instances.")
+
 
 def _all_placements(n_blocks: int, n_devices: int):
     for combo in itertools.product(range(n_devices), repeat=n_blocks):
@@ -30,6 +47,8 @@ def exact_myopic(blocks: Sequence[Block], cost: CostModel,
                  prev: Optional[np.ndarray] = None,
                  *, strict_eq6: bool = False
                  ) -> Tuple[Optional[np.ndarray], float]:
+    _check_enumerable(len(blocks), net.n_devices, MAX_MYOPIC_PLACEMENTS,
+                      "exact_myopic")
     best, best_val = None, np.inf
     for place in _all_placements(len(blocks), net.n_devices):
         if not memory_feasible(place, blocks, cost, net, tau):
@@ -45,6 +64,8 @@ def exact_horizon(blocks: Sequence[Block], cost: CostModel,
                   nets: List[DeviceNetwork], *, strict_eq6: bool = False
                   ) -> Tuple[List[np.ndarray], float]:
     """DP over intervals 1..T given per-interval resource snapshots."""
+    _check_enumerable(len(blocks), nets[0].n_devices, MAX_HORIZON_STATES,
+                      "exact_horizon")
     states = [p for p in _all_placements(len(blocks), nets[0].n_devices)]
     n = len(states)
     INF = np.inf

@@ -95,7 +95,8 @@ class _EngineBase:
     def __init__(self, cfg: ModelConfig, *, n_slots: int = 4,
                  max_seq: int = 512, lam: int = 16, seed: int = 0,
                  net: Optional[DeviceNetwork] = None, cost_cfg=None,
-                 part=None, tp: int = 1, greedy: bool = True):
+                 part=None, tp: int = 1, greedy: bool = True,
+                 layer_mode: str = "graph"):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -116,9 +117,16 @@ class _EngineBase:
         n_heads = (hd.Hp if hd and hd.Hp else max(cfg.n_heads, 1))
         heads_per_slot = max(1, n_heads // self.net.n_devices)
         ccfg = cost_cfg or cfg
+        # "graph" (default): the controller places the per-layer block
+        # graph of the ACTUAL model depth, so its per-layer permutations
+        # align 1:1 with the stacked cache/params; cost_cfg still sets the
+        # pricing dims (d_model).  "columns" keeps the old aggregate lift
+        # at cost_cfg's layer count.
+        n_l = cfg.n_layers if layer_mode == "graph" else ccfg.n_layers
         self.cost = CostModel(d_model=ccfg.d_model, n_heads=max(cfg.n_heads, 1),
-                              L0=8, n_layers=ccfg.n_layers, lam=lam,
-                              compute_mode="incremental")
+                              L0=8, n_layers=max(n_l, 1), lam=lam,
+                              compute_mode="incremental",
+                              layer_mode=layer_mode)
         self.controller = IntervalController(
             max(cfg.n_heads, 1), self.cost, self.net,
             ControllerConfig(lam=lam, heads_per_slot=heads_per_slot))
@@ -182,21 +190,52 @@ class _EngineBase:
         hd = getattr(self.model, "hd", None)
         mha = hd is not None and hd.Hp and hd.KvE == hd.Hp and hd.rep == 1
         if plan["migrations"] and mha:
-            # physical migration: permute weights AND cache by the same head
-            # permutation — model function is invariant, placement changes
-            # (placement_bridge.permute_model_heads). GQA archs migrate at
-            # group granularity; this demo engine logs those without moving.
+            # physical migration: permute weights AND cache by the same
+            # per-layer head permutations — attention is permutation-
+            # equivariant over heads within each layer, so the model
+            # function is invariant while the placement changes
+            # (placement_bridge). GQA archs migrate at group granularity;
+            # this demo engine logs those without moving.
             cache = state.get("cache")
             if isinstance(cache, dict) and "k" in cache \
                     and cache["k"].ndim >= 4:
-                prev = plan["prev_perm"]
-                old_pos = {int(h): i for i, h in enumerate(prev)}
-                rel = np.array([old_pos[int(h)] for h in plan["perm"]])
-                from repro.core.placement_bridge import permute_model_heads
-                self.params = permute_model_heads(self.params, rel)
-                k2, v2 = (jnp.take(cache["k"], jnp.asarray(rel), axis=-2),
-                          jnp.take(cache["v"], jnp.asarray(rel), axis=-2))
-                state = dict(state, cache=dict(cache, k=k2, v=v2))
+                from repro.core.placement_bridge import (
+                    apply_layer_head_perms, permute_model_heads,
+                    permute_model_heads_layers, relative_perms)
+                rel = relative_perms(plan["prev_perms"], plan["perms"])
+                # per-layer rows only map onto a cache whose LEADING axis
+                # is the layer stack (dense (L,B,T,KvE,dh)); grouped stacks
+                # (VLM (G,4,...)) must not be reshaped against n_layers
+                per_layer = rel.shape[0] > 1 and cache["k"].ndim >= 5 \
+                    and cache["k"].shape[0] == rel.shape[0]
+                new = dict(cache)
+                if per_layer:
+                    # row l migrates layer l independently
+                    self.params = permute_model_heads_layers(self.params,
+                                                             rel)
+                    new["k"], new["v"] = apply_layer_head_perms(
+                        cache["k"], cache["v"], rel,
+                        layer_axis=0, head_axis=-2)
+                    if "k_sc" in cache:   # int8 KV: per-(token,head) scales
+                        new["k_sc"], new["v_sc"] = apply_layer_head_perms(
+                            cache["k_sc"], cache["v_sc"], rel,
+                            layer_axis=0, head_axis=-1)
+                elif rel.shape[0] == 1 or bool(np.all(rel == rel[0])):
+                    # one layout for every layer: global permutation
+                    # broadcasts over any leading stack axes
+                    r = jnp.asarray(rel[0])
+                    self.params = permute_model_heads(self.params, rel[0])
+                    new["k"] = jnp.take(cache["k"], r, axis=-2)
+                    new["v"] = jnp.take(cache["v"], r, axis=-2)
+                    if "k_sc" in cache:
+                        new["k_sc"] = jnp.take(cache["k_sc"], r, axis=-1)
+                        new["v_sc"] = jnp.take(cache["v_sc"], r, axis=-1)
+                else:
+                    # per-layer plan on a cache layout we cannot address
+                    # per layer: leave placement logical-only
+                    new = None
+                if new is not None:
+                    state = dict(state, cache=new)
         self.migration_log.append({
             "step": self.decode_steps,
             "n_migrations": len(plan["migrations"]),

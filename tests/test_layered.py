@@ -1,0 +1,282 @@
+"""Per-layer block graph: equivalence regressions vs the column lift,
+solver guardrails, per-layer-beats-columns (exact), and per-layer head
+permutation invariance through the serving engine's migration machinery."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (ALL_POLICIES, DeviceNetwork, graph_of, make_blocks,
+                        replicate_placement)
+from repro.core.blocks import CostModel, FFN, HEAD, PROJ
+from repro.core.delay import (inference_delay, memory_feasible, memory_usage,
+                              migration_delay)
+from repro.core.network import GBPS
+from repro.core.placement_bridge import (migration_pairs_layers,
+                                         placement_to_perm,
+                                         placement_to_perms, relative_perms)
+from repro.core.solver import exact_myopic, exact_horizon
+
+GB = 1024 ** 3
+
+
+# ----------------------------------------------------------- graph basics
+def test_make_blocks_layer_major_and_backcompat():
+    single = make_blocks(4)
+    assert [b.kind for b in single] == [HEAD] * 4 + [PROJ, FFN]
+    assert all(b.layer == 0 for b in single)
+    multi = make_blocks(4, 3)
+    assert len(multi) == 3 * 6
+    assert [b.index for b in multi] == list(range(18))
+    assert [b.layer for b in multi] == sum([[l] * 6 for l in range(3)], [])
+    # layer 0 of the multi-layer list is the single-layer list
+    assert multi[:6] == single
+
+
+def test_block_graph_edges():
+    g = graph_of(make_blocks(4, 3))
+    edges = g.edges
+    assert len(edges) == 2 * 4          # (L-1) x heads
+    for src, dst in edges:
+        assert src.kind == FFN and dst.kind == HEAD
+        assert dst.layer == src.layer + 1
+
+
+def test_layer_mode_validation():
+    with pytest.raises(ValueError):
+        CostModel(d_model=512, n_heads=4, layer_mode="nope")
+
+
+# --------------------------------------------- n_layers=1 bit-for-bit
+@pytest.mark.parametrize("compute_mode", ["paper", "incremental"])
+def test_single_layer_graph_reproduces_columns_bit_for_bit(compute_mode):
+    """Acceptance: n_layers=1 per-layer graph == today's single-layer
+    numbers exactly (same blocks, same arithmetic path)."""
+    blocks = make_blocks(4)
+    cost_c = CostModel(d_model=2048, n_heads=4, compute_mode=compute_mode)
+    cost_g = CostModel(d_model=2048, n_heads=4, compute_mode=compute_mode,
+                       layer_mode="graph")
+    net = DeviceNetwork.sample(4, seed=3)
+    rng = np.random.default_rng(0)
+    p = rng.integers(0, 4, len(blocks))
+    q = rng.integers(0, 4, len(blocks))
+    for tau in (1, 7, 50):
+        assert inference_delay(p, blocks, cost_c, net, tau) == \
+            inference_delay(p, blocks, cost_g, net, tau)
+        assert migration_delay(p, q, blocks, cost_c, net, tau) == \
+            migration_delay(p, q, blocks, cost_g, net, tau)
+        np.testing.assert_array_equal(
+            memory_usage(p, blocks, cost_c, net, tau),
+            memory_usage(p, blocks, cost_g, net, tau))
+
+
+# ------------------------------------- column-replicated equivalence
+@pytest.mark.parametrize("compute_mode", ["paper", "incremental"])
+def test_column_replicated_graph_matches_scaled_columns(compute_mode):
+    """Equivalence regression: a uniform per-layer graph with a
+    column-replicated placement must match the n_layers-scaled single-layer
+    CostModel on inference delay, migration delay, and memory.
+
+    Memory and migration match on ANY network (per-layer blocks each carry
+    their single-layer footprint; a column move is n_layers identical
+    moves).  Inference delay additionally requires the terms the column
+    model cannot see to vanish: the controller row is uniform (so the one
+    w_in charge factors out of the per-head max identically) and every
+    link touching the proj/ffn devices is infinite (the column lift never
+    prices inter-layer hops or proj->ffn transfers — with those free, the
+    remaining head-compute, head->proj serialization, and proj/ffn compute
+    terms must agree exactly)."""
+    L, H, V = 4, 4, 4
+    cost_c = CostModel(d_model=512, n_heads=H, n_layers=L,
+                       compute_mode=compute_mode)
+    cost_g = CostModel(d_model=512, n_heads=H, n_layers=L,
+                       compute_mode=compute_mode, layer_mode="graph")
+    bl_c = make_blocks(H)
+    bl_g = make_blocks(H, L)
+    col = np.array([0, 1, 2, 3, 1, 2])     # heads spread, proj=1, ffn=2
+    pg = replicate_placement(col, bl_g)
+
+    net = DeviceNetwork.sample(V, seed=3)
+    net.bandwidth[net.controller, :] = 5e8
+    for dev in (1, 2):                     # proj and ffn devices
+        net.bandwidth[dev, :] = np.inf
+        net.bandwidth[:, dev] = np.inf
+    np.fill_diagonal(net.bandwidth, np.inf)
+    for tau in (1, 9, 40):
+        a = inference_delay(col, bl_c, cost_c, net, tau)
+        b = inference_delay(pg, bl_g, cost_g, net, tau)
+        assert np.isclose(a, b, rtol=1e-12), (tau, a, b)
+
+    # migration + memory: fully heterogeneous network, no special links
+    net2 = DeviceNetwork.sample(V, seed=11)
+    col2 = np.array([1, 0, 3, 2, 2, 0])
+    pg2 = replicate_placement(col2, bl_g)
+    for tau in (2, 17):
+        ma = migration_delay(col, col2, bl_c, cost_c, net2, tau)
+        mb = migration_delay(pg, pg2, bl_g, cost_g, net2, tau)
+        assert np.isclose(ma, mb, rtol=1e-12)
+        np.testing.assert_allclose(
+            memory_usage(col2, bl_c, cost_c, net2, tau),
+            memory_usage(pg2, bl_g, cost_g, net2, tau), rtol=1e-12)
+
+
+# ----------------------------------------------------- solver guardrail
+def test_exact_solvers_refuse_unenumerable_graphs():
+    """A per-layer graph above the enumerable size must raise a clear
+    ValueError immediately, not hang combinatorially."""
+    blocks = make_blocks(8, 8)                      # 80 blocks
+    cost = CostModel(d_model=512, n_heads=8, n_layers=8, layer_mode="graph")
+    net = DeviceNetwork.sample(5, seed=0)
+    with pytest.raises(ValueError, match="enumerable"):
+        exact_myopic(blocks, cost, net, 1, None)
+    # horizon cap is tighter: 9^6 placements pass myopic but not the DP
+    blocks6 = make_blocks(4)
+    cost6 = CostModel(d_model=512, n_heads=4)
+    nets = [DeviceNetwork.sample(9, seed=0) for _ in range(2)]
+    exact_myopic(blocks6, cost6, nets[0], 1, None)  # allowed (531441 <= 1e6)
+    with pytest.raises(ValueError, match="enumerable"):
+        exact_horizon(blocks6, cost6, nets)
+
+
+# ------------------------------------- per-layer beats columns (exact)
+def test_per_layer_optimum_strictly_beats_column_optimum():
+    """The structural claim behind the layered benchmark: on a
+    heterogeneous-bandwidth network the per-layer optimum is strictly below
+    the best column-co-partitioned placement (the column space is a strict
+    subset of the per-layer space)."""
+    L, H, V = 2, 2, 3
+    blocks = make_blocks(H, L)
+    cost = CostModel(d_model=512, n_heads=H, n_layers=L,
+                     compute_mode="paper", layer_mode="graph")
+    net = DeviceNetwork.sample(V, seed=0, bw_range=(0.02 * GBPS, 2 * GBPS),
+                               compute_range=(5e9, 50e9))
+    p_star, v_star = exact_myopic(blocks, cost, net, 3, None)
+    assert p_star is not None
+    from repro.core.delay import total_delay
+    best_col = min(
+        total_delay(None, replicate_placement(np.array(c), blocks), blocks,
+                    cost, net, 3)
+        for c in itertools.product(range(V), repeat=H + 2)
+        if memory_feasible(replicate_placement(np.array(c), blocks),
+                           blocks, cost, net, 3))
+    assert v_star < best_col - 1e-12
+    # and the replicated best-column IS reachable by the graph solver
+    assert v_star <= best_col
+
+
+def test_column_copartition_policy_is_column_replicated():
+    blocks = make_blocks(4, 3)
+    cost = CostModel(d_model=2048, n_heads=4, n_layers=3,
+                     compute_mode="incremental", layer_mode="graph")
+    net = DeviceNetwork.sample(4, seed=2)
+    pol = ALL_POLICIES["column-copartition"](blocks, cost, deadline=0.5)
+    p = pol.place(net, 1, None)
+    mat = p.reshape(3, 6)
+    for row in mat[1:]:
+        np.testing.assert_array_equal(row, mat[0])
+
+
+# -------------------------------------------------- per-layer bridge
+def test_placement_to_perms_per_layer():
+    blocks = make_blocks(8, 2)
+    rng = np.random.default_rng(4)
+    place = rng.integers(0, 4, len(blocks))
+    perms = placement_to_perms(place, blocks, n_slots=4, heads_per_slot=2)
+    assert perms.shape == (2, 8)
+    for l in range(2):
+        assert sorted(perms[l].tolist()) == list(range(8))
+    # layer rows equal the single-layer mapping of that layer's blocks
+    g = graph_of(blocks)
+    for l in range(2):
+        ref = placement_to_perm(place, g.layer_blocks(l), 4, 2)
+        np.testing.assert_array_equal(perms[l], ref)
+    assert migration_pairs_layers(perms, perms, 2) == []
+    # a head moving devices in layer 1 only shows up as a layer-1 pair
+    place2 = place.copy()
+    h = g.heads[1][0]
+    place2[h.index] = (place2[h.index] + 1) % 4
+    perms2 = placement_to_perms(place2, blocks, 4, 2)
+    pairs = migration_pairs_layers(perms, perms2, 2)
+    assert pairs and all(p[0] == 1 for p in pairs)
+
+
+def test_relative_perms_roundtrip():
+    rng = np.random.default_rng(0)
+    prev = np.stack([rng.permutation(6) for _ in range(3)])
+    new = np.stack([rng.permutation(6) for _ in range(3)])
+    rel = relative_perms(prev, new)
+    for l in range(3):
+        np.testing.assert_array_equal(prev[l][rel[l]], new[l])
+
+
+# ------------------------- migration invariance through the engine
+def test_per_layer_head_perms_are_function_invariant_in_engine():
+    """Per-layer head permutations applied to weights AND cache (the
+    serving engine's physical migration) leave the next decode step's
+    logits bit-identical — even when every layer gets a DIFFERENT
+    permutation, which the old single-permutation bridge could not
+    express."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from tests.conftest import reduced_config
+    from repro.core.placement_bridge import (apply_layer_head_perms,
+                                             permute_model_heads_layers)
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config("musicgen-large")      # MHA: physical path
+    eng = ServingEngine(cfg, n_slots=2, max_seq=48, lam=10 ** 9, seed=0)
+    assert eng.cost.layer_mode == "graph"
+    assert eng.controller.n_layers == cfg.n_layers
+    rng = np.random.default_rng(0)
+    for n in (5, 9):
+        eng.submit(rng.integers(0, 97, size=n), max_new_tokens=4)
+    eng._admit()
+    for _ in range(2):                          # populate per-slot caches
+        eng.step()
+    ref_logits, _ = eng.model.decode_step(eng.params, eng.state,
+                                          jnp.asarray(eng._next))
+
+    H = eng.state["cache"]["k"].shape[-2]
+    perms = np.stack([rng.permutation(H) for _ in range(cfg.n_layers)])
+    assert any(not np.array_equal(perms[l], perms[0])
+               for l in range(cfg.n_layers))    # genuinely per-layer
+    params2 = permute_model_heads_layers(eng.params, perms)
+    k2, v2 = apply_layer_head_perms(eng.state["cache"]["k"],
+                                    eng.state["cache"]["v"], perms,
+                                    layer_axis=0, head_axis=-2)
+    state2 = dict(eng.state, cache=dict(eng.state["cache"], k=k2, v=v2))
+    out_logits, _ = eng.model.decode_step(params2, state2,
+                                          jnp.asarray(eng._next))
+    np.testing.assert_allclose(np.asarray(ref_logits),
+                               np.asarray(out_logits), atol=1e-5, rtol=1e-5)
+
+
+def test_controller_emits_per_layer_plans_and_cache_roundtrip():
+    """Graph-mode controller plans carry one permutation per layer;
+    applying a plan to a stacked cache and then the inverse plan restores
+    it."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core.controller import ControllerConfig, IntervalController
+
+    H, L, V = 8, 3, 4
+    cost = CostModel(d_model=512, n_heads=H, n_layers=L,
+                     compute_mode="incremental", layer_mode="graph")
+    net = DeviceNetwork.sample(V, seed=1)
+    ctl = IntervalController(H, cost, net,
+                             ControllerConfig(lam=4, heads_per_slot=2))
+    plan1 = ctl.step_interval()
+    assert plan1["perms"].shape == (L, V * 2)
+    net.inject_straggler(int(ctl.head_counts().argmax()), slowdown=100.0)
+    ctl.observe(compute_avail=net.compute_avail)
+    plan2 = ctl.step_interval()
+    assert plan2["perms"].shape == (L, V * 2)
+    cache = jnp.arange(L * 2 * 5 * 8 * 4, dtype=jnp.float32
+                       ).reshape(L, 2, 5, 8, 4)
+    k2, v2 = ctl.apply_to_cache(cache, cache, plan2)
+    if plan2["migrations"]:
+        assert not np.array_equal(np.asarray(k2), np.asarray(cache))
+    # inverse plan restores the original layout
+    inv = {"perms": plan2["prev_perms"], "prev_perms": plan2["perms"],
+           "migrations": plan2["migrations"]}
+    k3, _ = ctl.apply_to_cache(k2, v2, inv)
+    np.testing.assert_array_equal(np.asarray(k3), np.asarray(cache))
