@@ -21,6 +21,7 @@ MODULES = [
     ("fig4", "benchmarks.memory_vs_tokens"),            # Fig. 4
     ("scalability", "benchmarks.scalability"),          # §V.D(c) (+ layers)
     ("serving_throughput", "benchmarks.serving_throughput"),  # engine tok/s
+    ("pipelined", "benchmarks.pipelined_decode"),       # K-in-flight tok/s
     ("kernels", "benchmarks.kernel_bench"),             # per-kernel
     ("roofline", "benchmarks.roofline"),                # deliverable (g)
 ]

@@ -13,6 +13,7 @@ if [[ "${RUN_SLOW_TESTS:-0}" == "1" ]]; then
 fi
 python -m pytest -x -q "$@"
 
-# benchmark smoke: the tiny-shape exact-solver group must keep running
-# (catches benchmark bit-rot without paying for the full figure sweeps)
-python -m benchmarks.run --only small_scale > /dev/null
+# benchmark smoke: the tiny-shape exact-solver group and the pipelined-
+# decode group must keep running (catches benchmark bit-rot without paying
+# for the full figure sweeps)
+python -m benchmarks.run --only small_scale,pipelined > /dev/null

@@ -24,12 +24,17 @@ from repro.core.blocks import (  # noqa: F401
     graph_of,
     make_blocks,
     replicate_placement,
+    stage_partition,
 )
 from repro.core.delay import (  # noqa: F401
     inference_delay,
     memory_feasible,
     memory_usage,
     migration_delay,
+    pipeline_bottleneck,
+    pipelined_inference_delay,
+    pipelined_total_delay,
+    resource_busy_times,
     total_delay,
 )
 from repro.core.network import DeviceNetwork, GB, GBPS, GFLOPS  # noqa: F401

@@ -65,26 +65,41 @@ class ResourceAwarePolicy(Policy):
     fastest feasible device — a move the score never proposes and the
     refinement finds.  Each refinement move must already pay for its own
     migration delay (it minimizes D_T + D_mig), the inherent anti-thrash
-    term."""
+    term.
+
+    ``pipeline_k`` > 1 switches the refinement/filter objective to
+    D_pipe(K) + D_mig (delay.py's pipelined model): the policy then
+    optimizes steady-state pipelined throughput — spreading layers over
+    disjoint device sets to shrink the bottleneck resource — instead of
+    the single-token critical path.  ``pipeline_k=1`` is the paper
+    objective bit-for-bit."""
     name = "resource-aware"
 
     def __init__(self, blocks, cost, *, deadline: float = 5.0,
                  migration_filter: bool = True,
-                 refine_passes: Optional[int] = None, **kw):
+                 refine_passes: Optional[int] = None,
+                 pipeline_k: int = 1, **kw):
         super().__init__(blocks, cost)
         self.assigner = ResourceAwareAssigner(blocks, cost,
                                               deadline=deadline, **kw)
         self.migration_filter = migration_filter
+        self.pipeline_k = pipeline_k
         multi = graph_of(self.blocks).n_layers > 1
         self.refine_passes = (1 if multi else 0) \
             if refine_passes is None else refine_passes
 
+    def _objective(self, prev, place, net, tau) -> float:
+        """D_T + D_mig, or D_pipe(K) + D_mig when pipeline-aware."""
+        from repro.core.delay import pipelined_total_delay
+        return pipelined_total_delay(prev, place, self.blocks, self.cost,
+                                     net, tau, k=self.pipeline_k)
+
     def _refine(self, prev, place, net, tau):
-        """Best-improvement local search on total_delay (memory-feasible
+        """Best-improvement local search on the objective (memory-feasible
         single-block moves), at most ``refine_passes`` sweeps."""
-        from repro.core.delay import memory_usage, total_delay
+        from repro.core.delay import memory_usage
         cur = place.copy()
-        cur_val = total_delay(prev, cur, self.blocks, self.cost, net, tau)
+        cur_val = self._objective(prev, cur, net, tau)
         mem = self.cost.memory_vector(self.blocks, tau)
         use = memory_usage(cur, self.blocks, self.cost, net, tau)
         for _ in range(self.refine_passes):
@@ -96,8 +111,7 @@ class ResourceAwarePolicy(Policy):
                     if j == src or use[j] + mem[i] > net.mem_capacity[j]:
                         continue
                     cur[i] = j
-                    val = total_delay(prev, cur, self.blocks, self.cost,
-                                      net, tau)
+                    val = self._objective(prev, cur, net, tau)
                     if val < best_val - 1e-12:
                         best_j, best_val = j, val
                 cur[i] = best_j
@@ -119,18 +133,10 @@ class ResourceAwarePolicy(Policy):
             placement = self._refine(prev, placement, net, tau)
         if prev is None or not self.migration_filter:
             return placement
-        from repro.core.delay import memory_feasible, total_delay
-        current = placement.copy()
-        cur_val = total_delay(prev, current, self.blocks, self.cost, net, tau)
-        for i in np.flatnonzero(current != prev):
-            trial = current.copy()
-            trial[i] = prev[i]
-            if not memory_feasible(trial, self.blocks, self.cost, net, tau):
-                continue
-            val = total_delay(prev, trial, self.blocks, self.cost, net, tau)
-            if val <= cur_val:
-                current, cur_val = trial, val
-        return current
+        from repro.core.delay import revert_unpaying_migrations
+        return revert_unpaying_migrations(prev, placement, self.blocks,
+                                          self.cost, net, tau,
+                                          k=self.pipeline_k)
 
 
 class GreedyPolicy(Policy):

@@ -130,6 +130,33 @@ class BlockGraph:
                 for l in range(self.n_layers - 1)
                 for h in self.heads[l + 1]]
 
+    def stage_partition(self, place) -> List[tuple]:
+        """Pipeline-stage view of a placement: maximal contiguous layer
+        runs greedily merged while their device sets intersect.  Adjacent
+        stages use disjoint device sets, so tokens in consecutive stages
+        can execute concurrently — the in-flight structure
+        ``pipelined_inference_delay`` prices (non-adjacent stages may still
+        share devices; the delay model's resource busy times, not this
+        view, bound the achievable overlap).
+
+        Returns ``[(frozenset devices, (layer, ...)), ...]`` in layer
+        order; ``len()`` is the natural micro-batch depth of the placement.
+        """
+        stages: List[tuple] = []
+        for l in range(self.n_layers):
+            devs = {int(place[b.index]) for b in self.layer_blocks(l)}
+            if stages and (stages[-1][0] & devs):
+                stages[-1][0].update(devs)
+                stages[-1][1].append(l)
+            else:
+                stages.append((set(devs), [l]))
+        return [(frozenset(d), tuple(ls)) for d, ls in stages]
+
+
+def stage_partition(place, blocks: Sequence[Block]) -> List[tuple]:
+    """Module-level convenience: ``graph_of(blocks).stage_partition``."""
+    return graph_of(blocks).stage_partition(place)
+
 
 # Keyed by (id, len) with a strong reference to the list held in the value:
 # while an entry lives, its list's id cannot be reused, so the key cannot

@@ -24,7 +24,8 @@ import numpy as np
 
 from repro.core.algorithm import ResourceAwareAssigner
 from repro.core.blocks import Block, CostModel, make_blocks
-from repro.core.delay import migration_delay, total_delay
+from repro.core.delay import (migration_delay, pipelined_inference_delay,
+                              revert_unpaying_migrations)
 from repro.core.network import DeviceNetwork
 from repro.core.placement_bridge import (apply_head_perm,
                                          apply_layer_head_perms,
@@ -38,6 +39,15 @@ class ControllerConfig:
     deadline: float = 0.2         # per-token latency budget (scoring)
     min_gain: float = 0.0         # extra migration-filter margin
     heads_per_slot: int = 2
+    # KV-group size (GQA: Hp // KvE query heads per KV head).  > 1 makes
+    # every emitted permutation group-consistent, so grouped caches/weights
+    # can physically migrate (placement_bridge.kv_group_perms).
+    group_size: int = 1
+    # decode tokens in flight across layer-disjoint stages; > 1 switches
+    # the migration-filter objective to D_pipe(K) + D_mig and the engine
+    # scales its interval cadence by K (λ stays token-denominated while a
+    # scheduler step advances only 1/K of the slots).
+    pipeline_k: int = 1
 
 
 class IntervalController:
@@ -93,24 +103,18 @@ class IntervalController:
         if place is None:
             place = prev if prev is not None else \
                 np.zeros(len(self.blocks), dtype=int)
-        # objective filter: keep migrations only if they pay (paper §III.G)
-        if prev is not None:
-            from repro.core.delay import memory_feasible
-            cur_val = total_delay(prev, place, self.blocks, self.cost,
-                                  self.net, self.tau)
-            for i in np.flatnonzero(place != prev):
-                trial = place.copy()
-                trial[i] = prev[i]
-                if not memory_feasible(trial, self.blocks, self.cost,
-                                       self.net, self.tau):
-                    continue
-                val = total_delay(prev, trial, self.blocks, self.cost,
-                                  self.net, self.tau)
-                if val <= cur_val - self.cfg.min_gain:
-                    place, cur_val = trial, val
+        # objective filter: keep migrations only if they pay (paper §III.G).
+        # With pipeline_k > 1 the objective is D_pipe(K) + D_mig — a move
+        # that lengthens the critical path but relieves the bottleneck
+        # resource can now win (k=1 is total_delay bit-for-bit).
+        k = self.cfg.pipeline_k
+        place = revert_unpaying_migrations(prev, place, self.blocks,
+                                           self.cost, self.net, self.tau,
+                                           k=k, min_gain=self.cfg.min_gain)
         n_slots = self.net.n_devices
         new_perms = placement_to_perms(place, self.blocks, n_slots,
-                                       self.cfg.heads_per_slot)
+                                       self.cfg.heads_per_slot,
+                                       self.cfg.group_size)
         pairs = [] if self.perms is None else \
             migration_pairs_layers(self.perms, new_perms,
                                    self.cfg.heads_per_slot)
@@ -121,7 +125,10 @@ class IntervalController:
                 "perm": new_perms[0],
                 "prev_perm": None if self.perms is None else self.perms[0],
                 "migrations": pairs,
-                "d_mig_est": d_mig, "infeasible": stats.infeasible}
+                "d_mig_est": d_mig,
+                "d_pipe_est": pipelined_inference_delay(
+                    place, self.blocks, self.cost, self.net, self.tau, k=k),
+                "infeasible": stats.infeasible}
         self.place, self.perms = place, new_perms
         self.history.append({"tau": self.tau, "n_migrations": len(pairs),
                              "d_mig_est": d_mig,
@@ -140,8 +147,10 @@ class IntervalController:
         if prev_perms is None or not plan["migrations"]:
             return cache_k, cache_v
         rel = relative_perms(prev_perms, plan["perms"])
+        gs = self.cfg.group_size
         if rel.shape[0] == 1:  # single-layer plan: same perm for all layers
-            return apply_head_perm(cache_k, cache_v, rel[0], head_axis)
+            return apply_head_perm(cache_k, cache_v, rel[0], head_axis,
+                                   group_size=gs)
         return apply_layer_head_perms(cache_k, cache_v, rel,
                                       layer_axis=layer_axis,
-                                      head_axis=head_axis)
+                                      head_axis=head_axis, group_size=gs)

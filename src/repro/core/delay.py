@@ -40,6 +40,25 @@ Concurrency semantics (§III.E/F), per layer:
 Migration (Eq. 2/7): D_mig = Σ_i m_i(τ-1)/R_{j,k}(τ), serialized per link
 — unchanged: per-layer blocks each contribute their single-layer
 footprint.
+
+Pipelined decode (beyond the printed model; Model-Distributed Inference,
+arXiv 2505.18164, and the comm/compute overlap accounting of arXiv
+2211.05102): with per-layer placements, consecutive decode tokens of
+*different* requests can occupy layer-disjoint device sets concurrently.
+``pipelined_inference_delay`` models K in-flight tokens: the first token
+pays the full sequential critical path D_T (pipeline fill), every further
+token is admitted one steady-state interval B later, where B is the
+busiest single resource's per-token busy time (per-device compute and
+per-directed-link transfer serialization are preserved — a resource can
+only serve one token's work at a time).  Per-token amortized delay:
+
+  D_pipe(K) = (D_T + (K-1)·B) / K,   B = min(bottleneck, D_T)
+
+K=1 is bit-for-bit ``inference_delay``.  B is clamped to D_T because Eq. 6's
+max-over-heads form can under-serialize transfers in *different* head
+chains sharing one directed link; operationally a pipeline can always
+degrade to sequential issue, so the steady-state interval never exceeds
+D_T — which also makes D_pipe(K) ≤ D_T an invariant for every K ≥ 1.
 """
 from __future__ import annotations
 
@@ -102,6 +121,92 @@ def inference_delay(place: np.ndarray, blocks: Sequence[Block],
     return float(total)
 
 
+def resource_busy_times(place: np.ndarray, blocks: Sequence[Block],
+                        cost: CostModel, net: DeviceNetwork, tau: int,
+                        *, strict_eq6: bool = False
+                        ) -> tuple[np.ndarray, dict]:
+    """Per-token busy time of every resource under ``place``: seconds each
+    device computes and each directed link transfers for ONE token's
+    traversal of all layers.  These are the §III.E serialization
+    constraints expressed as steady-state pipeline occupancies: a stream of
+    in-flight tokens cannot be admitted faster than the busiest resource
+    drains one token's share.
+
+    Returns ``(device_busy (V,), link_busy {(j, k): seconds})`` with
+    same-device transfers omitted (rate ∞, zero busy either way).
+    """
+    g = graph_of(blocks)
+    dev_busy = np.zeros(net.n_devices)
+    link_busy: dict = {}
+
+    def add_link(j: int, k: int, seconds: float):
+        if j != k and seconds > 0.0:
+            link_busy[(j, k)] = link_busy.get((j, k), 0.0) + seconds
+
+    src_dev = net.controller
+    w_in = cost.input_bytes(tau)
+    w_head = cost.head_to_proj_bytes(tau)
+    for l in range(g.n_layers):
+        heads = g.heads[l]
+        d_proj = int(place[g.proj[l].index])
+        d_ffn = int(place[g.ffn[l].index])
+        head_devs = set()
+        for h in heads:
+            j = int(place[h.index])
+            head_devs.add(j)
+            dev_busy[j] += cost.compute(h, tau) / net.compute_avail[j]
+            add_link(j, d_proj, w_head / _rate(net, j, d_proj))
+        # inter-layer broadcast: one transfer per destination device
+        # (co-located heads share it — the controller-input convention)
+        for j in sorted(head_devs):
+            add_link(src_dev, j, w_in / _rate(net, src_dev, j))
+        if not strict_eq6:
+            dev_busy[d_proj] += cost.compute(g.proj[l], tau) \
+                / net.compute_avail[d_proj]
+            dev_busy[d_ffn] += cost.compute(g.ffn[l], tau) \
+                / net.compute_avail[d_ffn]
+        add_link(d_proj, d_ffn,
+                 cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn))
+        src_dev = d_ffn
+        w_in = cost.interlayer_bytes(tau)
+    return dev_busy, link_busy
+
+
+def pipeline_bottleneck(place: np.ndarray, blocks: Sequence[Block],
+                        cost: CostModel, net: DeviceNetwork, tau: int,
+                        *, strict_eq6: bool = False) -> float:
+    """Steady-state per-token interval of a fully pipelined decode stream:
+    the busiest single resource's busy time (unclamped — callers comparing
+    against D_T should use ``pipelined_inference_delay``)."""
+    dev_busy, link_busy = resource_busy_times(place, blocks, cost, net, tau,
+                                              strict_eq6=strict_eq6)
+    worst = float(dev_busy.max()) if dev_busy.size else 0.0
+    if link_busy:
+        worst = max(worst, max(link_busy.values()))
+    return worst
+
+
+def pipelined_inference_delay(place: np.ndarray, blocks: Sequence[Block],
+                              cost: CostModel, net: DeviceNetwork, tau: int,
+                              *, k: int = 1,
+                              strict_eq6: bool = False) -> float:
+    """Per-token D_T with ``k`` tokens in flight over layer-disjoint stages
+    (module docstring): (D_T + (k-1)·B)/k with B = min(bottleneck, D_T).
+
+    ``k=1`` returns ``inference_delay`` bit-for-bit; D_pipe(k) ≤ D_T for
+    every k ≥ 1, with equality exactly when nothing overlaps (single
+    device, or B == D_T)."""
+    if k < 1:
+        raise ValueError(f"pipeline depth k must be >= 1, got {k}")
+    d_t = inference_delay(place, blocks, cost, net, tau,
+                          strict_eq6=strict_eq6)
+    if k == 1:
+        return d_t
+    b = min(pipeline_bottleneck(place, blocks, cost, net, tau,
+                                strict_eq6=strict_eq6), d_t)
+    return float((d_t + (k - 1) * b) / k)
+
+
 def migration_delay(prev: Optional[np.ndarray], place: np.ndarray,
                     blocks: Sequence[Block], cost: CostModel,
                     net: DeviceNetwork, tau: int) -> float:
@@ -123,6 +228,44 @@ def total_delay(prev: Optional[np.ndarray], place: np.ndarray,
     return inference_delay(place, blocks, cost, net, tau,
                            strict_eq6=strict_eq6) + \
         migration_delay(prev, place, blocks, cost, net, tau)
+
+
+def pipelined_total_delay(prev: Optional[np.ndarray], place: np.ndarray,
+                          blocks: Sequence[Block], cost: CostModel,
+                          net: DeviceNetwork, tau: int, *, k: int = 1,
+                          strict_eq6: bool = False) -> float:
+    """D_pipe(k) + D_mig — the objective pipeline-aware policies/solvers
+    optimize.  ``k=1`` is ``total_delay`` bit-for-bit."""
+    return pipelined_inference_delay(place, blocks, cost, net, tau, k=k,
+                                     strict_eq6=strict_eq6) + \
+        migration_delay(prev, place, blocks, cost, net, tau)
+
+
+def revert_unpaying_migrations(prev: Optional[np.ndarray],
+                               place: np.ndarray, blocks: Sequence[Block],
+                               cost: CostModel, net: DeviceNetwork,
+                               tau: int, *, k: int = 1,
+                               min_gain: float = 0.0) -> np.ndarray:
+    """§III.G's migration filter, shared by the controller and
+    ``ResourceAwarePolicy``: each migrated block is reverted to its
+    previous device when keeping the move does not lower
+    D_pipe(k) + D_mig by at least ``min_gain`` (k=1: D_T + D_mig).
+    Reverts are only taken when memory-feasible."""
+    if prev is None:
+        return place
+    current = place.copy()
+    cur_val = pipelined_total_delay(prev, current, blocks, cost, net, tau,
+                                    k=k)
+    for i in np.flatnonzero(current != prev):
+        trial = current.copy()
+        trial[i] = prev[i]
+        if not memory_feasible(trial, blocks, cost, net, tau):
+            continue
+        val = pipelined_total_delay(prev, trial, blocks, cost, net, tau,
+                                    k=k)
+        if val <= cur_val - min_gain:
+            current, cur_val = trial, val
+    return current
 
 
 def memory_usage(place: np.ndarray, blocks: Sequence[Block],

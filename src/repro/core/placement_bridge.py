@@ -30,7 +30,8 @@ from repro.core.blocks import Block, HEAD, graph_of
 
 
 def placement_to_perm(place: np.ndarray, blocks: Sequence[Block],
-                      n_slots: int, heads_per_slot: int) -> np.ndarray:
+                      n_slots: int, heads_per_slot: int,
+                      group_size: int = 1) -> np.ndarray:
     """Maps a block placement (head i -> device j) onto a head permutation.
 
     Head-blocks assigned to slot j occupy that slot's contiguous positions.
@@ -38,7 +39,21 @@ def placement_to_perm(place: np.ndarray, blocks: Sequence[Block],
     heads_per_slot — legal at the edge, not under SPMD) the overflow spills
     to the next slots round-robin; the spill count is reported so the
     controller can price it as extra migrations.
+
+    ``group_size`` > 1 (GQA: ``group_size = Hp // KvE`` query heads share
+    each KV head) makes the permutation *group-consistent*: whole KV groups
+    are the migration unit — every block of ``group_size`` output positions
+    holds one complete group in canonical within-group order, so the
+    induced KV permutation (``kv_group_perms``) is well defined and grouped
+    caches/weights physically move with their query heads.  A group whose
+    heads Algorithm 1 scattered over several devices is snapped to the
+    majority device (ties to the lowest device id); when ``group_size``
+    exceeds ``heads_per_slot`` a group spans adjacent slots — the
+    co-holding models KV replication across those slots.
     """
+    if group_size > 1:
+        return _placement_to_group_perm(place, blocks, n_slots,
+                                        heads_per_slot, group_size)
     head_ids = [b.head_id for b in blocks if b.kind == HEAD]
     n_heads = len(head_ids)
     assert n_slots * heads_per_slot >= n_heads
@@ -66,16 +81,96 @@ def placement_to_perm(place: np.ndarray, blocks: Sequence[Block],
     return out
 
 
+def _placement_to_group_perm(place: np.ndarray, blocks: Sequence[Block],
+                             n_slots: int, heads_per_slot: int,
+                             group_size: int) -> np.ndarray:
+    """Group-granular variant of ``placement_to_perm`` (see its docstring):
+    assigns whole KV groups to slots by majority vote over their heads'
+    placements and emits the head permutation that moves groups as units.
+
+    Permutation positions keep their slot meaning (slot s = positions
+    [s·hps, (s+1)·hps)): each block of ``group_size`` contiguous positions
+    has a *primary slot* and every group takes the free block nearest its
+    majority slot — so a group physically relocating between slots changes
+    the permutation (and therefore produces migration pairs) even when the
+    slot *order* of the groups is unchanged."""
+    positions = n_slots * heads_per_slot
+    if positions % group_size:
+        raise ValueError(f"{positions} head positions not divisible by "
+                         f"KV group size {group_size}")
+    heads = [b for b in blocks if b.kind == HEAD]
+    n_heads = len(heads)
+    if n_heads % group_size:
+        raise ValueError(f"{n_heads} heads not divisible by KV group "
+                         f"size {group_size}")
+    assert positions >= n_heads
+    dev_of = {b.head_id: int(place[b.index]) % n_slots for b in heads}
+    n_groups = n_heads // group_size
+    total_blocks = positions // group_size
+    # position-block p covers perm positions [p·G, (p+1)·G); its primary
+    # slot is the one holding the block's first position
+    primary = [(p * group_size) // heads_per_slot
+               for p in range(total_blocks)]
+    free = list(range(total_blocks))
+    order = np.full(total_blocks, -1, dtype=int)
+    for g in range(n_groups):
+        votes = np.bincount([dev_of[g * group_size + i]
+                             for i in range(group_size)],
+                            minlength=n_slots)
+        pref = int(np.argmax(votes))       # majority, ties -> lowest slot
+        p = min(free, key=lambda p: (abs(primary[p] - pref), p))
+        order[p] = g
+        free.remove(p)
+    # padded group ids (beyond the real heads) fill the remaining blocks
+    for g, p in zip(range(n_groups, total_blocks), free):
+        order[p] = g
+    out = np.empty(positions, dtype=int)
+    for p, g in enumerate(order):
+        out[p * group_size:(p + 1) * group_size] = \
+            g * group_size + np.arange(group_size)
+    return out
+
+
 def placement_to_perms(place: np.ndarray, blocks: Sequence[Block],
-                       n_slots: int, heads_per_slot: int) -> np.ndarray:
+                       n_slots: int, heads_per_slot: int,
+                       group_size: int = 1) -> np.ndarray:
     """Per-layer head permutations for a (possibly multi-layer) block
     graph: row l is ``placement_to_perm`` applied to layer l's blocks.
     Shape (n_layers, n_slots·heads_per_slot); a single-layer list yields
-    one row, identical to ``placement_to_perm``."""
+    one row, identical to ``placement_to_perm``.  ``group_size`` > 1 makes
+    every row group-consistent (GQA migrates whole KV groups)."""
     g = graph_of(blocks)
     return np.stack([placement_to_perm(place, g.layer_blocks(l),
-                                       n_slots, heads_per_slot)
+                                       n_slots, heads_per_slot, group_size)
                      for l in range(g.n_layers)])
+
+
+def kv_group_perms(perms: np.ndarray, group_size: int) -> np.ndarray:
+    """The KV-head permutation stack induced by group-consistent query-head
+    permutations: kv position p of row l holds old kv head
+    ``perms[l, p·G] // G``.  Shape (L, H/G).  Raises ``ValueError`` when a
+    block of ``group_size`` positions mixes heads from different KV groups
+    — the permutation then has no grouped-cache realization and applying it
+    would silently corrupt GQA attention."""
+    perms = np.atleast_2d(np.asarray(perms))
+    if group_size <= 1:
+        return perms
+    L, H = perms.shape
+    if H % group_size:
+        raise ValueError(f"perm width {H} not divisible by group size "
+                         f"{group_size}")
+    grouped = perms.reshape(L, H // group_size, group_size) // group_size
+    if not (grouped == grouped[:, :, :1]).all():
+        raise ValueError("head permutation is not KV-group-consistent: "
+                         "a block of positions mixes heads from different "
+                         "KV groups (emit perms via placement_to_perms("
+                         "group_size=...) for grouped-KV archs)")
+    out = grouped[:, :, 0]
+    for l in range(L):
+        if sorted(out[l].tolist()) != list(range(H // group_size)):
+            raise ValueError(f"induced KV permutation of layer {l} is not "
+                             f"a permutation: {out[l]}")
+    return out
 
 
 def migration_pairs(old_perm: np.ndarray, new_perm: np.ndarray,
@@ -122,22 +217,33 @@ def relative_perms(prev_perms: np.ndarray, new_perms: np.ndarray
     return out
 
 
-def apply_head_perm(cache_k, cache_v, perm, head_axis: int = 3):
+def apply_head_perm(cache_k, cache_v, perm, head_axis: int = 3,
+                    group_size: int = 1):
     """Reorders the expanded-KV head axis of a stacked cache
     ((L, B, T, KvE, dh) by default).  Under a head-sharded mesh this gather
     lowers to collective-permute / all-to-all between slots — the physical
-    migration."""
+    migration.  ``group_size`` > 1: ``perm`` is a (group-consistent)
+    query-head permutation and the cache head axis holds one KV head per
+    group — the induced KV permutation is applied instead."""
+    if group_size > 1:
+        perm = kv_group_perms(perm, group_size)[0]
     idx = jnp.asarray(perm)
     return (jnp.take(cache_k, idx, axis=head_axis),
             jnp.take(cache_v, idx, axis=head_axis))
 
 
 def apply_layer_head_perms(cache_k, cache_v, perms, *, layer_axis: int = 0,
-                           head_axis: int = 3):
+                           head_axis: int = 3, group_size: int = 1):
     """Per-layer reorder of a stacked cache ((L, B, T, KvE, dh) by default):
     row l of ``perms`` permutes layer l's head axis.  Under a head-sharded
     mesh each row lowers to collective-permute / all-to-all between slots —
-    the physical per-layer migration."""
+    the physical per-layer migration.  ``group_size`` > 1: rows are
+    (group-consistent) query-head permutations while the cache head axis is
+    KV heads (one per group) — rows are mapped through ``kv_group_perms``
+    so grouped caches physically move with their query heads instead of
+    being silently skipped."""
+    if group_size > 1:
+        perms = kv_group_perms(perms, group_size)
     idx = jnp.asarray(perms)
 
     def take(c):
@@ -154,17 +260,25 @@ def migration_bytes(pairs: Sequence[Tuple[int, int, int]],
     return float(len(pairs) * bytes_per_head)
 
 
-def permute_model_heads(params, perm, *, has_bias: bool = False):
+def permute_model_heads(params, perm, *, has_bias: bool = False,
+                        group_size: int = 1):
     """Physically relocate attention heads: permute the head axis of the
     per-head weight slices so head i lands on the mesh slot Algorithm 1
     chose.  Attention is permutation-equivariant over heads (wo sums over
     them), so the model *function* is bit-identical — only the placement
-    (which chip holds which head) changes.  Valid as-is for MHA layouts
-    (KvE == Hp, rep == 1); GQA archs migrate at group granularity.
+    (which chip holds which head) changes.
+
+    ``group_size`` > 1 (GQA, ``Hp // KvE``): ``perm`` must be
+    group-consistent; q-side weights (wq/wo/bq) move by the query-head
+    permutation, kv-side weights (wk/wv/bk/bv) by the induced KV-group
+    permutation — whole groups migrate, so the q→kv association is
+    preserved and the function stays invariant.
 
     params: full model params (stacked layers supported via negative axes).
     """
     idx = jnp.asarray(perm)
+    kv_idx = idx if group_size <= 1 else \
+        jnp.asarray(kv_group_perms(perm, group_size)[0])
 
     def visit(tree):
         if isinstance(tree, dict):
@@ -173,12 +287,14 @@ def permute_model_heads(params, perm, *, has_bias: bool = False):
                 if k == "attn" and isinstance(v, dict):
                     a = dict(v)
                     a["wq"] = jnp.take(v["wq"], idx, axis=-2)
-                    a["wk"] = jnp.take(v["wk"], idx, axis=-2)
-                    a["wv"] = jnp.take(v["wv"], idx, axis=-2)
+                    a["wk"] = jnp.take(v["wk"], kv_idx, axis=-2)
+                    a["wv"] = jnp.take(v["wv"], kv_idx, axis=-2)
                     a["wo"] = jnp.take(v["wo"], idx, axis=-3)
-                    for b in ("bq", "bk", "bv"):
+                    if "bq" in v:
+                        a["bq"] = jnp.take(v["bq"], idx, axis=-2)
+                    for b in ("bk", "bv"):
                         if b in v:
-                            a[b] = jnp.take(v[b], idx, axis=-2)
+                            a[b] = jnp.take(v[b], kv_idx, axis=-2)
                     out[k] = a
                 else:
                     out[k] = visit(v)
@@ -188,24 +304,31 @@ def permute_model_heads(params, perm, *, has_bias: bool = False):
     return visit(params)
 
 
-def permute_model_heads_layers(params, perms, *, has_bias: bool = False):
+def permute_model_heads_layers(params, perms, *, has_bias: bool = False,
+                               group_size: int = 1):
     """Per-layer physical head relocation: row l of ``perms`` permutes the
     head axis of layer l's attention weights.  Requires layer-stacked attn
     params with the layer axis leading (the dense transformer's
     ``params["layers"]`` layout).  Attention is permutation-equivariant
     over heads *within each layer* (wo sums over them), so any combination
     of per-layer permutations leaves the model function bit-identical —
-    only which chip holds which (layer, head) changes.  MHA layouts only
-    (KvE == Hp, rep == 1); GQA archs migrate at group granularity.
+    only which chip holds which (layer, head) changes.
+
+    ``group_size`` > 1 (GQA): rows must be group-consistent; wq/wo/bq move
+    by the query-head rows, wk/wv/bk/bv by the induced per-layer KV-group
+    permutations (``kv_group_perms``) — the grouped-KV migration that used
+    to be silently skipped.
     """
     idx = jnp.asarray(perms)
+    kv = idx if group_size <= 1 else \
+        jnp.asarray(kv_group_perms(perms, group_size))
 
-    def take(w, axis):
+    def take(w, axis, rows):
         axis = axis % w.ndim
         shape = [1] * w.ndim
-        shape[0] = idx.shape[0]
-        shape[axis] = idx.shape[1]
-        return jnp.take_along_axis(w, idx.reshape(shape), axis=axis)
+        shape[0] = rows.shape[0]
+        shape[axis] = rows.shape[1]
+        return jnp.take_along_axis(w, rows.reshape(shape), axis=axis)
 
     def visit(tree):
         if isinstance(tree, dict):
@@ -213,13 +336,15 @@ def permute_model_heads_layers(params, perms, *, has_bias: bool = False):
             for k, v in tree.items():
                 if k == "attn" and isinstance(v, dict):
                     a = dict(v)
-                    a["wq"] = take(v["wq"], -2)
-                    a["wk"] = take(v["wk"], -2)
-                    a["wv"] = take(v["wv"], -2)
-                    a["wo"] = take(v["wo"], -3)
-                    for b in ("bq", "bk", "bv"):
+                    a["wq"] = take(v["wq"], -2, idx)
+                    a["wk"] = take(v["wk"], -2, kv)
+                    a["wv"] = take(v["wv"], -2, kv)
+                    a["wo"] = take(v["wo"], -3, idx)
+                    if "bq" in v:
+                        a["bq"] = take(v["bq"], -2, idx)
+                    for b in ("bk", "bv"):
                         if b in v:
-                            a[b] = take(v[b], -2)
+                            a[b] = take(v[b], -2, kv)
                     out[k] = a
                 else:
                     out[k] = visit(v)
@@ -227,6 +352,19 @@ def permute_model_heads_layers(params, perms, *, has_bias: bool = False):
         return tree
 
     return visit(params)
+
+
+def stage_slot_partition(place, blocks: Sequence[Block],
+                         n_slots: int) -> List[tuple]:
+    """Mesh-slot view of ``BlockGraph.stage_partition``: contiguous layer
+    stages whose *slot* sets (device % n_slots) are adjacent-disjoint.
+    ``len()`` bounds the micro-batch depth K a serving engine can usefully
+    keep in flight on this placement — stage s+1's slots are free to start
+    the next token while stage s finishes the previous one."""
+    g = graph_of(blocks)
+    slot_place = np.asarray(place, dtype=int) % n_slots
+    return [(frozenset(devs), layer_ids)
+            for devs, layer_ids in g.stage_partition(slot_place)]
 
 
 # ---------------------------------------------------------------------------

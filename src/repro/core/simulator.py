@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.core.baselines import Policy
 from repro.core.blocks import Block, CostModel
-from repro.core.delay import inference_delay, memory_usage, migration_delay
+from repro.core.delay import (inference_delay, memory_usage,
+                              migration_delay, pipelined_inference_delay)
 from repro.core.network import DeviceNetwork
 
 
@@ -76,8 +77,12 @@ def overload_stall(place: np.ndarray, blocks: Sequence[Block],
 def simulate(policy: Policy, blocks: Sequence[Block], cost: CostModel,
              net: DeviceNetwork, n_tokens: int, *,
              fluctuate: bool = True, swap_bw: float = 1e9,
-             strict_eq6: bool = False, seed: Optional[int] = None
-             ) -> SimResult:
+             strict_eq6: bool = False, seed: Optional[int] = None,
+             pipeline_k: int = 1) -> SimResult:
+    """``pipeline_k`` > 1 prices each step at the amortized per-token
+    pipelined delay D_pipe(K) — K tokens of different requests in flight
+    over layer-disjoint stages — instead of the sequential D_T.
+    ``pipeline_k=1`` is unchanged bit-for-bit."""
     net = net.copy()
     if seed is not None:
         net.rng = np.random.default_rng(seed)
@@ -107,8 +112,13 @@ def simulate(policy: Policy, blocks: Sequence[Block], cost: CostModel,
             n_mig = 0
         else:
             d_mig = migration_delay(prev, place, blocks, cost, net, tau)
-            d_inf = inference_delay(place, blocks, cost, net, tau,
-                                    strict_eq6=strict_eq6)
+            if pipeline_k > 1:
+                d_inf = pipelined_inference_delay(place, blocks, cost, net,
+                                                  tau, k=pipeline_k,
+                                                  strict_eq6=strict_eq6)
+            else:
+                d_inf = inference_delay(place, blocks, cost, net, tau,
+                                        strict_eq6=strict_eq6)
             d_ovl = overload_stall(place, blocks, cost, net, tau, swap_bw)
             n_mig = 0 if prev is None else int((prev != place).sum())
             use = memory_usage(place, blocks, cost, net, tau)

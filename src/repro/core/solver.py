@@ -20,7 +20,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.blocks import Block, CostModel
-from repro.core.delay import memory_feasible, total_delay
+from repro.core.delay import memory_feasible, pipelined_total_delay
 from repro.core.network import DeviceNetwork
 
 MAX_MYOPIC_PLACEMENTS = 1_000_000
@@ -45,25 +45,28 @@ def _all_placements(n_blocks: int, n_devices: int):
 def exact_myopic(blocks: Sequence[Block], cost: CostModel,
                  net: DeviceNetwork, tau: int,
                  prev: Optional[np.ndarray] = None,
-                 *, strict_eq6: bool = False
+                 *, strict_eq6: bool = False, pipeline_k: int = 1
                  ) -> Tuple[Optional[np.ndarray], float]:
+    """``pipeline_k`` > 1 minimizes D_pipe(K) + D_mig (the steady-state
+    pipelined objective); the default is the paper's D_T + D_mig."""
     _check_enumerable(len(blocks), net.n_devices, MAX_MYOPIC_PLACEMENTS,
                       "exact_myopic")
     best, best_val = None, np.inf
     for place in _all_placements(len(blocks), net.n_devices):
         if not memory_feasible(place, blocks, cost, net, tau):
             continue
-        val = total_delay(prev, place, blocks, cost, net, tau,
-                          strict_eq6=strict_eq6)
+        val = pipelined_total_delay(prev, place, blocks, cost, net, tau,
+                                    k=pipeline_k, strict_eq6=strict_eq6)
         if val < best_val:
             best, best_val = place.copy(), val
     return best, best_val
 
 
 def exact_horizon(blocks: Sequence[Block], cost: CostModel,
-                  nets: List[DeviceNetwork], *, strict_eq6: bool = False
-                  ) -> Tuple[List[np.ndarray], float]:
-    """DP over intervals 1..T given per-interval resource snapshots."""
+                  nets: List[DeviceNetwork], *, strict_eq6: bool = False,
+                  pipeline_k: int = 1) -> Tuple[List[np.ndarray], float]:
+    """DP over intervals 1..T given per-interval resource snapshots.
+    ``pipeline_k`` > 1 prices each stage at D_pipe(K) + D_mig."""
     _check_enumerable(len(blocks), nets[0].n_devices, MAX_HORIZON_STATES,
                       "exact_horizon")
     states = [p for p in _all_placements(len(blocks), nets[0].n_devices)]
@@ -74,8 +77,9 @@ def exact_horizon(blocks: Sequence[Block], cost: CostModel,
     parent = np.full((len(nets), n), -1, dtype=int)
     for s, p in enumerate(states):
         if memory_feasible(p, blocks, cost, nets[0], 1):
-            val[s] = total_delay(None, p, blocks, cost, nets[0], 1,
-                                 strict_eq6=strict_eq6)
+            val[s] = pipelined_total_delay(None, p, blocks, cost, nets[0], 1,
+                                           k=pipeline_k,
+                                           strict_eq6=strict_eq6)
     for t in range(1, len(nets)):
         tau = t + 1
         new_val = np.full(n, INF)
@@ -85,8 +89,9 @@ def exact_horizon(blocks: Sequence[Block], cost: CostModel,
             for s0, p0 in enumerate(states):
                 if val[s0] == INF:
                     continue
-                v = val[s0] + total_delay(p0, p, blocks, cost, nets[t], tau,
-                                          strict_eq6=strict_eq6)
+                v = val[s0] + pipelined_total_delay(
+                    p0, p, blocks, cost, nets[t], tau,
+                    k=pipeline_k, strict_eq6=strict_eq6)
                 if v < new_val[s]:
                     new_val[s] = v
                     parent[t, s] = s0

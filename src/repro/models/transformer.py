@@ -370,14 +370,38 @@ class TransformerLM:
         """Copy a batch-1 prefilled ``sub`` state (cache length Lb <= T)
         into batch row ``slot`` of a persistent per-slot decode state:
         the slot-manager write of continuous batching.  ``slot`` may be a
-        traced scalar — one compile serves every slot."""
-        cache, sub_cache = state["cache"], sub["cache"]
+        traced scalar — one compile serves every slot.
+
+        K/V buffers carry their batch axis at ``ndim - 4`` (dense
+        (L,B,T,KvE,dh) -> axis 1, VLM self caches (G,4,B,T,KvE,dh) -> axis
+        2, VLM ``img_kv`` (G,B,I,KvE,dh) -> axis 1), so one splice rule
+        covers every cache layout; VLM states additionally splice the
+        request's static image K/V and mask rows."""
         slot = jnp.asarray(slot, jnp.int32)
-        upd = {}
-        for name in ("k", "v"):
-            src = sub_cache[name].astype(cache[name].dtype)
-            start = (jnp.int32(0), slot) + (jnp.int32(0),) * (cache[name].ndim - 2)
-            upd[name] = jax.lax.dynamic_update_slice(cache[name], src, start)
+
+        def splice_kv(dst, src, batch_axis):
+            start = tuple(slot if a == batch_axis else jnp.int32(0)
+                          for a in range(dst.ndim))
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), start)
+
+        cache, sub_cache = state["cache"], sub["cache"]
+        upd = {name: splice_kv(cache[name], sub_cache[name],
+                               cache[name].ndim - 4)
+               for name in ("k", "v")}
         pos = jax.lax.dynamic_update_slice(
             state["pos"], jnp.asarray(sub["pos"], jnp.int32), (slot,))
-        return dict(state, cache=dict(cache, **upd), pos=pos)
+        out = dict(state, cache=dict(cache, **upd), pos=pos)
+        if "img_kv" in state and "img_kv" in sub:
+            img = state["img_kv"]
+            out["img_kv"] = dict(img, **{
+                name: splice_kv(img[name], sub["img_kv"][name],
+                                img[name].ndim - 4)
+                for name in ("k", "v")})
+        if state.get("img_mask") is not None and \
+                sub.get("img_mask") is not None:
+            out["img_mask"] = jax.lax.dynamic_update_slice(
+                state["img_mask"],
+                jnp.asarray(sub["img_mask"], state["img_mask"].dtype),
+                (slot, jnp.int32(0)))
+        return out

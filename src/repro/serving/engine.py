@@ -20,7 +20,17 @@ Two schedulers over the same model/controller stack:
   fresh prefill compile — ``benchmarks/serving_throughput.py`` quantifies
   the gap.
 
-Every λ decode steps the IntervalController observes step-time telemetry
+``ServingEngine(pipeline_k=K)`` adds cross-device decode pipelining: slots
+split into K groups with independent decode states and each step advances
+one group, so K different requests' tokens are in flight across
+layer-disjoint placement stages (delay.pipelined_inference_delay prices
+the overlap; benchmarks/pipelined_decode.py measures it).  GQA archs now
+migrate *physically* at KV-group granularity (group-consistent
+permutations from placement_bridge), and VLM decode states are slot-wired
+(per-request image K/V spliced by insert_slot) — both former skip paths.
+
+Every λ generated tokens (λ·pipeline_k scheduler steps) the
+IntervalController observes step-time telemetry
 plus the *actual* per-slot cache occupancy, re-runs Algorithm 1, and
 applies head migrations to weights AND cache in the inter-step gap — the
 paper's per-interval migration loop as a production serving feature.
@@ -50,6 +60,13 @@ from repro.models.api import build_model
 from repro.runtime.fault_tolerance import HeartbeatMonitor
 
 
+class UnsupportedArchError(NotImplementedError):
+    """Raised at ENGINE CONSTRUCTION for architectures the slot-level
+    scheduler cannot serve — never mid-serve: by the time requests flow,
+    the config has already been vetted.  Subclasses NotImplementedError so
+    pre-existing callers' except clauses keep working."""
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -60,15 +77,17 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    img: Optional[np.ndarray] = None       # (I, D) VLM patch embeddings
+    img_mask: Optional[np.ndarray] = None  # (I,) bool
 
 
 def supports_continuous(cfg: ModelConfig) -> Optional[str]:
     """None when ``cfg`` can run the slot-level scheduler, else the reason
-    it can't (cfg-only, so ``make_engine`` decides before building params)."""
+    it can't (cfg-only, so ``make_engine`` decides before building params).
+    VLM states are slot-wired (img_kv/img_mask splice in
+    ``TransformerLM.insert_slot``), so vlm no longer falls back."""
     if cfg.family in ("ssm", "hybrid"):
         return f"{cfg.family} archs have no prefill_bucketed/insert_slot API"
-    if cfg.family == "vlm":
-        return "VLM decode states (img_kv, grouped caches) are not slot-wired"
     if cfg.sliding_window:
         return "continuous batching needs a linear KV cache, not a ring"
     if getattr(cfg, "kv_quant", False):
@@ -96,11 +115,12 @@ class _EngineBase:
                  max_seq: int = 512, lam: int = 16, seed: int = 0,
                  net: Optional[DeviceNetwork] = None, cost_cfg=None,
                  part=None, tp: int = 1, greedy: bool = True,
-                 layer_mode: str = "graph"):
+                 layer_mode: str = "graph", pipeline_k: int = 1):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.greedy = greedy
+        self.pipeline_k = max(1, int(pipeline_k))
         from repro.models.partitioning import NULL
         self.model = build_model(cfg, tp=tp, part=part or NULL)
         self.params = self.model.init(jax.random.PRNGKey(seed))
@@ -127,9 +147,25 @@ class _EngineBase:
                               L0=8, n_layers=max(n_l, 1), lam=lam,
                               compute_mode="incremental",
                               layer_mode=layer_mode)
+        # KV-group size: GQA stacks migrate whole groups (query heads move
+        # with their shared KV head), so the controller emits
+        # group-consistent permutations — the old silent skip is gone.
+        # Geometry must divide at CONSTRUCTION (never mid-serve): the
+        # bridge's head-position space is n_devices·heads_per_slot wide and
+        # group blocks must tile it exactly.
+        group = hd.groups if hd and hd.Hp and hd.KvE else 1
+        if group > 1 and ((self.net.n_devices * heads_per_slot) % group
+                          or max(cfg.n_heads, 1) % group):
+            raise UnsupportedArchError(
+                f"{cfg.name}: KV group size {group} does not tile the "
+                f"{self.net.n_devices}x{heads_per_slot} head-slot geometry "
+                f"— pick a device count whose head positions are a "
+                f"multiple of the group size")
         self.controller = IntervalController(
             max(cfg.n_heads, 1), self.cost, self.net,
-            ControllerConfig(lam=lam, heads_per_slot=heads_per_slot))
+            ControllerConfig(lam=lam, heads_per_slot=heads_per_slot,
+                             group_size=group,
+                             pipeline_k=self.pipeline_k))
         self.monitor = HeartbeatMonitor(self.net.n_devices)
         self.lam = lam
         self.decode_steps = 0
@@ -176,88 +212,150 @@ class _EngineBase:
             self.monitor.record_step(j, dt)
 
     # --------------------------------------------------------------- interval
-    def _interval(self, state, tau_tokens: Optional[int] = None):
-        """The paper's controller interval: observe -> Algorithm 1 ->
-        migrate head shards in the decode gap.  ``tau_tokens`` anchors the
-        cost model to the observed decode stream (mean slot occupancy)."""
+    def _interval_plan(self, tau_tokens: Optional[int] = None) -> dict:
+        """Observe -> Algorithm 1: one migration plan per interval.
+        ``tau_tokens`` anchors the cost model to the observed decode stream
+        (mean slot occupancy, in tokens — in-flight depth never changes
+        this conversion, only the *cadence* at which intervals fire)."""
         self.net.step_background_load()
         self.controller.observe(compute_avail=self.net.compute_avail)
         tau = None
         if tau_tokens is not None:
             tau = max(1, round((tau_tokens - self.cost.L0)
                                / max(self.cost.lam, 1)))
-        plan = self.controller.step_interval(tau=tau)
+        return self.controller.step_interval(tau=tau)
+
+    def _migrate_state(self, state, plan, permute_params: bool = True):
+        """Execute ``plan`` physically on one decode state: permute weights
+        AND caches by the same (group-consistent) per-layer head
+        permutations — attention is permutation-equivariant over heads
+        (GQA: over whole KV groups) within each layer, so the model
+        function is invariant while the placement changes
+        (placement_bridge).  Returns (state, applied, reason): every
+        not-applied path is reported, never silently skipped.
+
+        ``permute_params=False`` skips the (shared) weight permutation —
+        callers holding several decode states for one set of params (the
+        pipelined engine's in-flight groups) permute weights exactly once
+        per plan."""
         hd = getattr(self.model, "hd", None)
-        mha = hd is not None and hd.Hp and hd.KvE == hd.Hp and hd.rep == 1
-        if plan["migrations"] and mha:
-            # physical migration: permute weights AND cache by the same
-            # per-layer head permutations — attention is permutation-
-            # equivariant over heads within each layer, so the model
-            # function is invariant while the placement changes
-            # (placement_bridge). GQA archs migrate at group granularity;
-            # this demo engine logs those without moving.
-            cache = state.get("cache")
-            if isinstance(cache, dict) and "k" in cache \
-                    and cache["k"].ndim >= 4:
-                from repro.core.placement_bridge import (
-                    apply_layer_head_perms, permute_model_heads,
-                    permute_model_heads_layers, relative_perms)
-                rel = relative_perms(plan["prev_perms"], plan["perms"])
-                # per-layer rows only map onto a cache whose LEADING axis
-                # is the layer stack (dense (L,B,T,KvE,dh)); grouped stacks
-                # (VLM (G,4,...)) must not be reshaped against n_layers
-                per_layer = rel.shape[0] > 1 and cache["k"].ndim >= 5 \
-                    and cache["k"].shape[0] == rel.shape[0]
-                new = dict(cache)
-                if per_layer:
-                    # row l migrates layer l independently
-                    self.params = permute_model_heads_layers(self.params,
-                                                             rel)
-                    new["k"], new["v"] = apply_layer_head_perms(
-                        cache["k"], cache["v"], rel,
-                        layer_axis=0, head_axis=-2)
-                    if "k_sc" in cache:   # int8 KV: per-(token,head) scales
-                        new["k_sc"], new["v_sc"] = apply_layer_head_perms(
-                            cache["k_sc"], cache["v_sc"], rel,
-                            layer_axis=0, head_axis=-1)
-                elif rel.shape[0] == 1 or bool(np.all(rel == rel[0])):
-                    # one layout for every layer: global permutation
-                    # broadcasts over any leading stack axes
-                    r = jnp.asarray(rel[0])
-                    self.params = permute_model_heads(self.params, rel[0])
-                    new["k"] = jnp.take(cache["k"], r, axis=-2)
-                    new["v"] = jnp.take(cache["v"], r, axis=-2)
-                    if "k_sc" in cache:
-                        new["k_sc"] = jnp.take(cache["k_sc"], r, axis=-1)
-                        new["v_sc"] = jnp.take(cache["v_sc"], r, axis=-1)
-                else:
-                    # per-layer plan on a cache layout we cannot address
-                    # per layer: leave placement logical-only
-                    new = None
-                if new is not None:
-                    state = dict(state, cache=new)
+        if not (hd is not None and hd.Hp and hd.rep == 1):
+            return state, False, "rep>1 KV replication is not migratable"
+        G = hd.groups  # 1 = MHA; >1 = GQA, migrated at group granularity
+        cache = state.get("cache")
+        if not (isinstance(cache, dict) and "k" in cache
+                and cache["k"].ndim >= 4):
+            return state, False, "state has no addressable KV cache"
+        from repro.core.placement_bridge import (
+            apply_layer_head_perms, kv_group_perms, permute_model_heads,
+            permute_model_heads_layers, relative_perms)
+        rel = relative_perms(plan["prev_perms"], plan["perms"])
+        # per-layer rows only map onto a cache whose LEADING axis is the
+        # layer stack (dense (L,B,T,KvE,dh)); grouped stacks (VLM
+        # (G,4,...)) must not be reshaped against n_layers
+        per_layer = rel.shape[0] > 1 and cache["k"].ndim >= 5 \
+            and cache["k"].shape[0] == rel.shape[0]
+        new = dict(cache)
+        if per_layer:
+            # row l migrates layer l independently
+            if permute_params:
+                self.params = permute_model_heads_layers(self.params, rel,
+                                                         group_size=G)
+            new["k"], new["v"] = apply_layer_head_perms(
+                cache["k"], cache["v"], rel,
+                layer_axis=0, head_axis=-2, group_size=G)
+            if "k_sc" in cache:   # int8 KV: per-(token,head) scales
+                new["k_sc"], new["v_sc"] = apply_layer_head_perms(
+                    cache["k_sc"], cache["v_sc"], rel,
+                    layer_axis=0, head_axis=-1, group_size=G)
+            return dict(state, cache=new), True, None
+        if rel.shape[0] == 1 or bool(np.all(rel == rel[0])):
+            # one layout for every layer: global permutation broadcasts
+            # over any leading stack axes (dense AND VLM (G,4,...))
+            rkv = jnp.asarray(kv_group_perms(rel[:1], G)[0]) if G > 1 \
+                else jnp.asarray(rel[0])
+            if permute_params:
+                self.params = permute_model_heads(self.params, rel[0],
+                                                  group_size=G)
+            new["k"] = jnp.take(cache["k"], rkv, axis=-2)
+            new["v"] = jnp.take(cache["v"], rkv, axis=-2)
+            if "k_sc" in cache:
+                new["k_sc"] = jnp.take(cache["k_sc"], rkv, axis=-1)
+                new["v_sc"] = jnp.take(cache["v_sc"], rkv, axis=-1)
+            out = dict(state, cache=new)
+            if "img_kv" in state:
+                # VLM static image K/V follow their (permuted) cross-attn
+                # projections
+                img = state["img_kv"]
+                out["img_kv"] = dict(img,
+                                     k=jnp.take(img["k"], rkv, axis=-2),
+                                     v=jnp.take(img["v"], rkv, axis=-2))
+            return out, True, None
+        # per-layer plan on a cache layout we cannot address per layer
+        return state, False, \
+            "per-layer plan on a cache without a leading layer axis"
+
+    def _interval(self, state, tau_tokens: Optional[int] = None):
+        """The paper's controller interval: observe -> Algorithm 1 ->
+        migrate head shards in the decode gap."""
+        plan = self._interval_plan(tau_tokens)
+        applied, reason = False, None
+        if plan["migrations"]:
+            state, applied, reason = self._migrate_state(state, plan)
+        self._log_interval(plan, applied, reason)
+        return state
+
+    def _log_interval(self, plan, applied: bool, reason: Optional[str]):
         self.migration_log.append({
             "step": self.decode_steps,
             "n_migrations": len(plan["migrations"]),
-            "d_mig_est": plan["d_mig_est"]})
-        return state
+            "d_mig_est": plan["d_mig_est"],
+            "d_pipe_est": plan.get("d_pipe_est"),
+            "applied": applied, "reason": reason})
 
 
 class ServingEngine(_EngineBase):
     """Continuous-batching scheduler: persistent per-slot KV cache, admit-
-    on-free-slot, bucketed prefill, per-slot decode masking."""
+    on-free-slot, bucketed prefill, per-slot decode masking.
+
+    ``pipeline_k`` > 1 keeps K decode tokens in flight across slot groups
+    (micro-batched decode pipelining, Model-Distributed Inference style):
+    the slots are partitioned into K contiguous groups with independent
+    decode states, and each scheduler step advances ONE group — while
+    group g's token transits the later layer stages, groups g+1..K-1 issue
+    theirs into the earlier stages.  In-flight depth is bounded by slot
+    occupancy (an empty group is a pipeline bubble, it cannot carry a
+    token), and the controller's migration cadence scales by K: a slot
+    generates one token every K steps, so λ tokens per slot = λ·K
+    scheduler steps (the interval accounting stays token-denominated).
+
+    VLM configs are slot-wired: ``submit`` takes per-request image patch
+    embeddings, prefill projects them into the request's static image K/V,
+    and ``insert_slot`` splices img_kv/img_mask rows alongside the cache.
+    """
 
     def __init__(self, cfg: ModelConfig, *,
-                 buckets: Optional[Sequence[int]] = None, **kw):
+                 buckets: Optional[Sequence[int]] = None,
+                 img_tokens: int = 16, **kw):
         reason = supports_continuous(cfg)   # cheap cfg-only check BEFORE
         if reason is not None:              # params/controller are built
-            raise NotImplementedError(reason + "; use WaveServingEngine")
+            raise UnsupportedArchError(reason + "; use WaveServingEngine")
         super().__init__(cfg, **kw)
         assert hasattr(self.model, "prefill_bucketed"), type(self.model)
+        if self.n_slots % self.pipeline_k:
+            raise ValueError(f"n_slots={self.n_slots} must be divisible by "
+                             f"pipeline_k={self.pipeline_k}")
+        if self.pipeline_k > 1 and not self.greedy:
+            raise ValueError("pipeline_k > 1 requires greedy decoding "
+                             "(host-side sampling would serialize groups)")
+        self.rows_per_group = self.n_slots // self.pipeline_k
         self.buckets = sorted(set(buckets)) if buckets \
             else default_buckets(self.max_seq)
-        self.state: Dict[str, Any] = self.model.init_decode_state(
-            self.params, self.n_slots, self.max_seq, per_slot=True)
+        self.is_vlm = cfg.family == "vlm"
+        self.img_tokens = img_tokens
+        self.states: List[Dict[str, Any]] = [
+            self._fresh_state(self.rows_per_group)
+            for _ in range(self.pipeline_k)]
         self.slots: List[Optional[Request]] = [None] * self.n_slots
         self._next = np.zeros(self.n_slots, np.int32)
         self._prefill_bucketed_jit = jax.jit(self.model.prefill_bucketed)
@@ -269,10 +367,60 @@ class ServingEngine(_EngineBase):
         self.prefill_buckets_used: set = set()
         self.slot_busy_steps = 0              # sum of active slots per step
 
+    def _fresh_state(self, batch: int, max_seq: Optional[int] = None,
+                     img: Optional[np.ndarray] = None,
+                     img_mask: Optional[np.ndarray] = None):
+        kw: Dict[str, Any] = {"per_slot": True}
+        if self.is_vlm:
+            # fixed-size image K/V buffer; empty rows are fully masked and
+            # project zero K/V, so imageless slots attend to nothing
+            kw["img_embeds"] = jnp.zeros(
+                (batch, self.img_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype)) if img is None \
+                else jnp.asarray(img)
+            kw["img_mask"] = jnp.zeros((batch, self.img_tokens), jnp.bool_) \
+                if img_mask is None else jnp.asarray(img_mask)
+        return self.model.init_decode_state(
+            self.params, batch, max_seq or self.max_seq, **kw)
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def state(self) -> Dict[str, Any]:
+        """The decode state (single-group engines only — pipelined engines
+        hold one state per in-flight group in ``states``)."""
+        assert self.pipeline_k == 1, "pipelined engine: use .states[g]"
+        return self.states[0]
+
+    def _group_of(self, slot: int) -> tuple:
+        return slot // self.rows_per_group, slot % self.rows_per_group
+
     # ---------------------------------------------------------------- intake
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
-        self._bucket(len(np.asarray(prompt)))   # reject over-long at intake,
-        return super().submit(prompt, max_new_tokens)  # not mid-run
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               img_embeds: Optional[np.ndarray] = None) -> int:
+        """``img_embeds`` (I, d_model), I <= ``img_tokens``: VLM image
+        patch embeddings for this request (right-padded + masked into the
+        engine's fixed image buffer).  Rejected at intake, not mid-run."""
+        self._bucket(len(np.asarray(prompt)))   # reject over-long at intake
+        if img_embeds is not None and not self.is_vlm:
+            raise ValueError(f"{self.cfg.name} is not a VLM: it takes no "
+                             f"image embeddings")
+        rid = super().submit(prompt, max_new_tokens)
+        if self.is_vlm:
+            req = self.queue[-1]
+            img = np.zeros((self.img_tokens, self.cfg.d_model), np.float32)
+            mask = np.zeros((self.img_tokens,), bool)
+            if img_embeds is not None:
+                img_embeds = np.asarray(img_embeds)
+                n = img_embeds.shape[0]
+                if img_embeds.ndim != 2 or n > self.img_tokens \
+                        or img_embeds.shape[1] != self.cfg.d_model:
+                    raise ValueError(
+                        f"img_embeds must be (I<={self.img_tokens}, "
+                        f"{self.cfg.d_model}), got {img_embeds.shape}")
+                img[:n] = img_embeds
+                mask[:n] = True
+            req.img, req.img_mask = img, mask
+        return rid
 
     # ------------------------------------------------------------- scheduler
     def _bucket(self, n: int) -> int:
@@ -310,13 +458,16 @@ class ServingEngine(_EngineBase):
             Lb = self._bucket(L0)
             toks = np.zeros((1, Lb), np.int32)
             toks[0, :L0] = r.prompt
-            sub = self.model.init_decode_state(self.params, 1, Lb,
-                                               per_slot=True)
+            sub = self._fresh_state(
+                1, Lb,
+                img=None if r.img is None else r.img[None],
+                img_mask=None if r.img_mask is None else r.img_mask[None])
             logits, sub = self._prefill_bucketed_jit(
                 self.params, sub, jnp.asarray(toks),
                 jnp.asarray([L0], jnp.int32))
             self.prefill_buckets_used.add(Lb)
-            self.state = self._insert_jit(self.state, sub, s)
+            g, row = self._group_of(s)
+            self.states[g] = self._insert_jit(self.states[g], sub, row)
             r.t_first = time.monotonic()
             self.slots[s] = r
             tok = int(self._sample(logits)[0])
@@ -329,6 +480,11 @@ class ServingEngine(_EngineBase):
     def _active(self) -> List[int]:
         return [s for s in range(self.n_slots) if self.slots[s] is not None]
 
+    def _group_active(self, g: int) -> List[int]:
+        lo = g * self.rows_per_group
+        return [s for s in range(lo, lo + self.rows_per_group)
+                if self.slots[s] is not None]
+
     def _occupancy(self) -> float:
         """Mean tokens resident per active slot (prompt + generated)."""
         act = self._active()
@@ -339,28 +495,49 @@ class ServingEngine(_EngineBase):
 
     def step(self) -> bool:
         """One scheduler iteration: admit into free slots, then one decode
-        step across all active slots.  Returns False when idle."""
+        step for the in-flight group whose pipeline phase is due (with
+        ``pipeline_k=1`` that is every active slot — the sequential path,
+        unchanged).  Returns False when idle.
+
+        An empty due group is a pipeline bubble: the step still advances
+        the phase clock (in-flight depth is bounded by slot occupancy) but
+        produces no tokens."""
         self._admit()
-        active = self._active()
-        if not active:
+        if not self._active():
             return False
-        t0 = time.monotonic()
-        logits, self.state = self._decode_jit(self.params, self.state,
-                                              jnp.asarray(self._next))
-        jax.block_until_ready(logits)
-        dt = time.monotonic() - t0
-        toks = self._sample(logits)
+        g = self.decode_steps % self.pipeline_k
+        lo = g * self.rows_per_group
+        active = self._group_active(g)
+        if active:
+            t0 = time.monotonic()
+            nxt = self._next[lo:lo + self.rows_per_group]
+            logits, self.states[g] = self._decode_jit(
+                self.params, self.states[g], jnp.asarray(nxt))
+            jax.block_until_ready(logits)
+            dt = time.monotonic() - t0
+            toks = self._sample(logits)
         self.decode_steps += 1
-        self.slot_busy_steps += len(active)
-        for s in active:
-            tok = int(toks[s])
-            self.slots[s].out_tokens.append(tok)
-            self._next[s] = tok
-            self._finish_check(s)
-        self._record_step(dt)
-        if self.decode_steps % self.lam == 0:
-            self.state = self._interval(self.state,
-                                        tau_tokens=self._occupancy())
+        if active:
+            self.slot_busy_steps += len(active)
+            for s in active:
+                tok = int(toks[s - lo])
+                self.slots[s].out_tokens.append(tok)
+                self._next[s] = tok
+                self._finish_check(s)
+            self._record_step(dt)
+        # migration cadence scales with the in-flight depth: a slot emits
+        # one token every pipeline_k steps, so λ tokens per slot = λ·K
+        # scheduler steps — the controller fires per λ *generated* tokens,
+        # matching wall-clock token output (the τ anchor itself is already
+        # token-denominated via _occupancy)
+        if self.decode_steps % (self.lam * self.pipeline_k) == 0:
+            plan = self._interval_plan(tau_tokens=self._occupancy())
+            applied, reason = False, None
+            if plan["migrations"]:
+                for i in range(self.pipeline_k):
+                    self.states[i], applied, reason = self._migrate_state(
+                        self.states[i], plan, permute_params=(i == 0))
+            self._log_interval(plan, applied, reason)
         return True
 
     def run(self, max_steps: int = 10_000):

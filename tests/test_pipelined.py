@@ -1,0 +1,349 @@
+"""Cross-device decode pipelining + the migrations the engine used to
+skip: K=1 bit-for-bit equivalence, the D_pipe <= D_T invariant
+(hypothesis), GQA group-granular migration through the engine (logits and
+streams invariant), VLM slot wiring, and controller-interval scaling under
+in-flight depth K."""
+import numpy as np
+import pytest
+
+from repro.core import (ALL_POLICIES, CostModel, DeviceNetwork,
+                        inference_delay, make_blocks, migration_delay,
+                        pipeline_bottleneck, pipelined_inference_delay,
+                        pipelined_total_delay, simulate, stage_partition,
+                        total_delay)
+from repro.core.network import GBPS
+from repro.core.placement_bridge import (apply_layer_head_perms,
+                                         kv_group_perms, placement_to_perms,
+                                         stage_slot_partition)
+from repro.core.solver import exact_myopic
+
+
+# ------------------------------------------------- K=1 bit-for-bit
+@pytest.mark.parametrize("compute_mode", ["paper", "incremental"])
+@pytest.mark.parametrize("layer_mode,n_layers", [("columns", 1), ("graph", 1),
+                                                 ("graph", 4)])
+def test_k1_equals_inference_delay_bit_for_bit(compute_mode, layer_mode,
+                                               n_layers):
+    """Acceptance: pipelined_inference_delay(..., k=1) == inference_delay
+    exactly, on the same fixtures test_layered exercises."""
+    blocks = make_blocks(4, n_layers if layer_mode == "graph" else 1)
+    cost = CostModel(d_model=2048, n_heads=4, n_layers=n_layers,
+                     compute_mode=compute_mode, layer_mode=layer_mode)
+    net = DeviceNetwork.sample(4, seed=3)
+    rng = np.random.default_rng(0)
+    for tau in (1, 7, 50):
+        p = rng.integers(0, 4, len(blocks))
+        q = rng.integers(0, 4, len(blocks))
+        assert pipelined_inference_delay(p, blocks, cost, net, tau, k=1) == \
+            inference_delay(p, blocks, cost, net, tau)
+        assert pipelined_total_delay(q, p, blocks, cost, net, tau, k=1) == \
+            total_delay(q, p, blocks, cost, net, tau)
+
+
+def test_pipelined_rejects_k_below_one():
+    blocks = make_blocks(2)
+    cost = CostModel(d_model=256, n_heads=2)
+    net = DeviceNetwork.sample(2, seed=0)
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        pipelined_inference_delay(np.zeros(4, int), blocks, cost, net, 1,
+                                  k=0)
+
+
+# --------------------------------------------- D_pipe <= D_T invariant
+def test_dpipe_bounded_by_dt_hypothesis():
+    """On random multi-layer graphs and placements, K in flight never
+    exceeds the sequential per-token delay, and D_pipe is non-increasing
+    in K (more overlap cannot slow the stream)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5),
+           st.integers(1, 6), st.integers(2, 6), st.integers(1, 40))
+    def check(seed, n_layers, n_heads, n_dev, tau):
+        rng = np.random.default_rng(seed)
+        blocks = make_blocks(n_heads, n_layers)
+        cost = CostModel(d_model=256, n_heads=n_heads, n_layers=n_layers,
+                         layer_mode="graph",
+                         compute_mode=("paper", "incremental")[seed % 2])
+        net = DeviceNetwork.sample(n_dev, seed=seed % 1000,
+                                   bw_range=(0.01 * GBPS, 5 * GBPS))
+        place = rng.integers(0, n_dev, len(blocks))
+        d_t = inference_delay(place, blocks, cost, net, tau)
+        prev = d_t
+        for k in (1, 2, 3, 8, 64):
+            d_k = pipelined_inference_delay(place, blocks, cost, net, tau,
+                                            k=k)
+            assert d_k <= d_t * (1 + 1e-12), (k, d_k, d_t)
+            assert d_k <= prev * (1 + 1e-12)
+            prev = d_k
+
+    check()
+
+
+def test_single_device_placement_has_no_overlap():
+    """Everything on the controller device: no links exist at all, the
+    bottleneck IS the critical path, and pipelining gains nothing
+    (D_pipe(k) == D_T for every k)."""
+    blocks = make_blocks(4, 3)
+    cost = CostModel(d_model=512, n_heads=4, n_layers=3, layer_mode="graph")
+    net = DeviceNetwork.sample(3, seed=1)
+    place = np.full(len(blocks), net.controller, dtype=int)
+    d_t = inference_delay(place, blocks, cost, net, 4)
+    for k in (2, 16):
+        assert np.isclose(pipelined_inference_delay(place, blocks, cost,
+                                                    net, 4, k=k), d_t)
+    assert np.isclose(pipeline_bottleneck(place, blocks, cost, net, 4),
+                      d_t)  # compute-only critical path == device busy time
+
+
+def test_stage_partition_views():
+    """Layer-disjoint placements split into stages; sharing a device
+    merges the run."""
+    blocks = make_blocks(2, 4)
+    place = np.empty(len(blocks), dtype=int)
+    for l, dev in enumerate((0, 0, 1, 2)):     # layers 0-1 share device 0
+        place[l * 4:(l + 1) * 4] = dev
+    stages = stage_partition(place, blocks)
+    assert [sorted(s) for s, _ in stages] == [[0], [1], [2]]
+    assert [ls for _, ls in stages] == [(0, 1), (2,), (3,)]
+    slot_stages = stage_slot_partition(place, blocks, n_slots=2)
+    # device 2 aliases slot 0 -> layer 3 folds into... slot sets only
+    assert all(isinstance(s, frozenset) for s, _ in slot_stages)
+
+
+# --------------------------------- pipeline-aware policy and solvers
+def test_pipeline_aware_solver_and_policy_prefer_spread():
+    """With k>1 the exact solver's objective is D_pipe + D_mig; its
+    optimum is never worse-than-sequential, and the pipelined optimum
+    delay is <= the sequential optimum's pipelined price."""
+    blocks = make_blocks(2, 2)
+    cost = CostModel(d_model=512, n_heads=2, n_layers=2, layer_mode="graph",
+                     compute_mode="incremental")
+    net = DeviceNetwork.sample(3, seed=5, bw_range=(0.5 * GBPS, 5 * GBPS))
+    p_seq, v_seq = exact_myopic(blocks, cost, net, 3, None)
+    p_pipe, v_pipe = exact_myopic(blocks, cost, net, 3, None, pipeline_k=4)
+    assert p_pipe is not None
+    assert v_pipe <= pipelined_total_delay(None, p_seq, blocks, cost, net,
+                                           3, k=4) + 1e-12
+    assert v_pipe <= v_seq + 1e-12   # D_pipe <= D_T pointwise
+
+    pol = ALL_POLICIES["resource-aware"](blocks, cost, deadline=0.5,
+                                         pipeline_k=4)
+    res = simulate(pol, blocks, cost, net, 6, seed=0, fluctuate=False,
+                   pipeline_k=4)
+    pol0 = ALL_POLICIES["resource-aware"](blocks, cost, deadline=0.5)
+    res0 = simulate(pol0, blocks, cost, net, 6, seed=0, fluctuate=False)
+    assert res.total_latency <= res0.total_latency + 1e-12
+
+
+# ------------------------------------------------ group-consistent perms
+def test_placement_to_perms_group_consistent_and_moves():
+    blocks = make_blocks(4, 1)
+    # g0 on slot 1, g1 on slot 3 -> relocation of g0 changes the perm
+    p1 = np.array([1, 1, 3, 3, 0, 0])
+    p2 = np.array([2, 2, 3, 3, 0, 0])
+    perm1 = placement_to_perms(p1, blocks, 4, 1, group_size=2)
+    perm2 = placement_to_perms(p2, blocks, 4, 1, group_size=2)
+    assert not np.array_equal(perm1, perm2)
+    for perm in (perm1, perm2):
+        kv = kv_group_perms(perm, 2)          # validates + induces
+        assert sorted(kv[0].tolist()) == [0, 1]
+    # non-group-consistent permutations are refused, not silently applied
+    with pytest.raises(ValueError, match="group-consistent"):
+        kv_group_perms(np.array([[1, 2, 3, 0]]), 2)
+    import jax.numpy as jnp
+    cache = jnp.zeros((1, 1, 4, 2, 4))
+    with pytest.raises(ValueError, match="group-consistent"):
+        apply_layer_head_perms(cache, cache, np.array([[1, 2, 3, 0]]),
+                               layer_axis=0, head_axis=-2, group_size=2)
+
+
+# ---------------------------------------- GQA migration via the engine
+def test_gqa_group_migration_logits_invariant():
+    """Acceptance: a GQA config physically migrates KV groups — per-layer
+    group-consistent permutations applied to weights AND grouped cache
+    leave the next decode step's logits invariant."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from tests.conftest import reduced_config
+    from repro.core.placement_bridge import permute_model_heads_layers
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config("llama3-8b", n_kv_heads=2)     # GQA: G = 2
+    eng = ServingEngine(cfg, n_slots=2, max_seq=48, lam=10 ** 9, seed=0)
+    assert eng.model.hd.groups == 2
+    rng = np.random.default_rng(0)
+    for n in (5, 9):
+        eng.submit(rng.integers(0, 97, size=n), max_new_tokens=4)
+    eng._admit()
+    for _ in range(2):                                  # populate caches
+        eng.step()
+    ref, _ = eng.model.decode_step(eng.params, eng.state,
+                                   jnp.asarray(eng._next))
+    # per-layer, genuinely different group swaps (layer 0 swaps, 1 doesn't)
+    perms = np.array([[2, 3, 0, 1], [0, 1, 2, 3]])
+    params2 = permute_model_heads_layers(eng.params, perms, group_size=2)
+    k2, v2 = apply_layer_head_perms(eng.state["cache"]["k"],
+                                    eng.state["cache"]["v"], perms,
+                                    layer_axis=0, head_axis=-2,
+                                    group_size=2)
+    assert k2.shape == eng.state["cache"]["k"].shape    # KvE axis stays 2
+    assert not np.array_equal(np.asarray(k2),
+                              np.asarray(eng.state["cache"]["k"]))
+    state2 = dict(eng.state, cache=dict(eng.state["cache"], k=k2, v=v2))
+    out, _ = eng.model.decode_step(params2, state2, jnp.asarray(eng._next))
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gqa_migration_roundtrip_through_engine():
+    """End-to-end: the controller migrates a GQA cache mid-serve (no
+    silent skip — the log reports applied migrations) and the generated
+    streams equal a migration-free run."""
+    pytest.importorskip("jax")
+    from tests.conftest import reduced_config
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config("llama3-8b", n_kv_heads=2)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, size=n) for n in (5, 11, 8, 14, 6)]
+
+    def run(lam, straggle_at):
+        # 2 devices: each mesh slot holds exactly one KV group
+        eng = ServingEngine(cfg, n_slots=2, max_seq=64, lam=lam, seed=0,
+                            net=DeviceNetwork.sample(2, seed=1))
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=10 + 3 * (i % 2))
+        while True:
+            if straggle_at is not None and eng.decode_steps == straggle_at:
+                dev = int(eng.controller.head_counts().argmax())
+                eng.net.inject_straggler(dev, slowdown=500.0)
+            if not eng.step():
+                break
+        return {r.rid: r.out_tokens for r in eng.finished}, eng
+
+    with_mig, eng = run(3, straggle_at=4)
+    without, _ = run(10 ** 9, None)
+    assert with_mig == without and len(with_mig) == 5
+    applied = [e for e in eng.migration_log
+               if e["applied"] and e["n_migrations"]]
+    assert applied, "GQA migration silently skipped"
+    assert all(e["reason"] is None for e in applied)
+
+
+# ----------------------------------------------------- VLM slot wiring
+def test_vlm_requests_are_slot_wired():
+    """VLM decode states (img_kv, grouped caches) splice per slot: each
+    request's stream matches the single-request reference, and the image
+    content genuinely matters (nonzero cross-attn gates)."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from tests.conftest import reduced_config
+    from repro.serving.engine import ServingEngine, make_engine
+
+    cfg = reduced_config("llama-3.2-vision-11b")
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(cfg, n_slots=2, max_seq=48, lam=10 ** 9, seed=0,
+                        img_tokens=8)
+    assert isinstance(make_engine(cfg, n_slots=2, max_seq=32, seed=0),
+                      ServingEngine)
+    gates = eng.params["cross_layers"]["attn"]["gate"]
+    eng.params["cross_layers"]["attn"]["gate"] = jnp.ones_like(gates) * 0.7
+    eng.params["cross_layers"]["gate_ffn"] = \
+        jnp.ones_like(eng.params["cross_layers"]["gate_ffn"]) * 0.5
+
+    prompts = [rng.integers(0, 97, size=n).astype(np.int32)
+               for n in (4, 7, 9)]
+    imgs = [rng.standard_normal((5, cfg.d_model)).astype(np.float32),
+            None,                                   # imageless request
+            rng.standard_normal((8, cfg.d_model)).astype(np.float32)]
+    for p, im in zip(prompts, imgs):
+        eng.submit(p, max_new_tokens=5, img_embeds=im)
+    done = eng.run()
+    assert len(done) == 3
+
+    def reference(prompt, img):
+        pad = np.zeros((eng.img_tokens, cfg.d_model), np.float32)
+        mask = np.zeros((eng.img_tokens,), bool)
+        if img is not None:
+            pad[:img.shape[0]] = img
+            mask[:img.shape[0]] = True
+        state = eng.model.init_decode_state(
+            eng.params, 1, 48, img_embeds=jnp.asarray(pad[None]),
+            img_mask=jnp.asarray(mask[None]))
+        logits, state = eng.model.prefill(
+            eng.params, state, jnp.asarray(prompt[None], jnp.int32))
+        toks = [int(jnp.argmax(logits[0]))]
+        step = jax.jit(eng.model.decode_step)
+        for _ in range(4):
+            logits, state = step(eng.params, state,
+                                 jnp.asarray([toks[-1]], jnp.int32))
+            toks.append(int(jnp.argmax(logits[0])))
+        return toks
+
+    for r in sorted(done, key=lambda r: r.rid):
+        assert r.out_tokens == reference(prompts[r.rid], imgs[r.rid]), \
+            f"rid {r.rid}"
+    # the image is load-bearing, not decorative
+    assert reference(prompts[0], imgs[0]) != reference(prompts[0], None)
+
+
+def test_unsupported_archs_raise_typed_error_at_construction():
+    pytest.importorskip("jax")
+    from tests.conftest import reduced_config
+    from repro.serving.engine import ServingEngine, UnsupportedArchError
+
+    for arch in ("rwkv6-7b", "zamba2-2.7b", "mixtral-8x7b"):
+        with pytest.raises(UnsupportedArchError):
+            ServingEngine(reduced_config(arch), n_slots=2, max_seq=32,
+                          seed=0)
+    # GQA geometry that the group blocks cannot tile is rejected at
+    # construction too, never mid-serve (3 devices x 1 head/slot, G=2)
+    with pytest.raises(UnsupportedArchError, match="group size"):
+        ServingEngine(reduced_config("llama3-8b", n_kv_heads=2),
+                      n_slots=2, max_seq=32, seed=0,
+                      net=DeviceNetwork.sample(3, seed=1))
+    # non-VLM engines reject image payloads at intake
+    eng = ServingEngine(reduced_config("llama3-8b"), n_slots=2, max_seq=32,
+                        seed=0)
+    with pytest.raises(ValueError, match="not a VLM"):
+        eng.submit(np.zeros(4, np.int32), img_embeds=np.zeros((4, 64)))
+
+
+# --------------------------------- controller interval under pipelining
+def test_interval_cadence_scales_with_pipeline_depth():
+    """A slot emits one token every K steps, so λ tokens per slot = λ·K
+    scheduler steps: intervals fire at multiples of lam*K and the streams
+    stay identical to sequential decode."""
+    pytest.importorskip("jax")
+    from tests.conftest import reduced_config
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config("llama3-8b")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, size=n) for n in (4, 9, 6, 11)]
+
+    def run(k, lam):
+        eng = ServingEngine(cfg, n_slots=4, max_seq=48, lam=lam, seed=0,
+                            pipeline_k=k)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=6)
+        eng.run()
+        return {r.rid: r.out_tokens for r in eng.finished}, eng
+
+    seq, e1 = run(1, lam=4)
+    pipe, e2 = run(2, lam=4)
+    assert seq == pipe and len(pipe) == 4
+    assert e1.migration_log and e2.migration_log
+    assert all(e["step"] % 4 == 0 for e in e1.migration_log)
+    assert all(e["step"] % 8 == 0 for e in e2.migration_log)
+    # same token-denominated cadence: K=2 fires half as often per step
+    # but identically per generated token
+    assert len(e2.migration_log) <= len(e1.migration_log)
+
+    with pytest.raises(ValueError, match="divisible"):
+        ServingEngine(cfg, n_slots=3, max_seq=48, seed=0, pipeline_k=2)
+    with pytest.raises(ValueError, match="greedy"):
+        ServingEngine(cfg, n_slots=4, max_seq=48, seed=0, pipeline_k=2,
+                      greedy=False)

@@ -156,9 +156,9 @@ def test_make_engine_falls_back_for_unsupported_archs():
     assert isinstance(eng, WaveServingEngine)
     with pytest.raises(NotImplementedError):
         ServingEngine(moe, n_slots=2, max_seq=32, lam=10 ** 9, seed=0)
-    # the reject is cfg-only (no params built) and covers every family
-    # without a slot API
-    for arch in ("rwkv6-7b", "zamba2-2.7b", "llama-3.2-vision-11b"):
+    # the reject is cfg-only (no params built), typed, and covers every
+    # family without a slot API; VLM is slot-wired now (test_pipelined)
+    for arch in ("rwkv6-7b", "zamba2-2.7b"):
         cfg = reduced_config(arch)
         with pytest.raises(NotImplementedError):
             ServingEngine(cfg, n_slots=2, max_seq=32, seed=0)
