@@ -19,12 +19,18 @@ from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 KEY = jax.random.PRNGKey(0)
 
 
-def _time(fn, *args, reps=3):
+def _time(fn, *args, reps=5):
+    """Min-of-reps wall time (us): the minimum is the standard
+    noise-robust statistic for micro-benches — scheduler preemption and
+    cache pollution only ever ADD time, so the min tracks the true cost
+    and keeps the --check regression gate from flapping."""
     fn(*args)  # compile
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
 
 
 def bench_flash(B=1, H=8, KvE=8, S=1024, dh=128):
@@ -72,6 +78,80 @@ def bench_rwkv6(B=1, H=8, S=512, dh=64):
     hbm = 4 * B * H * S * dh * 2 + B * H * S * dh * 4
     tpu_us = hbm / HBM_BW * 1e6
     return us, f"allclose_err={err:.1e};tpu_membound_us={tpu_us:.1f}"
+
+
+def bench_kernel_decode(B=4, H=8, KvE=4, T=512, dh=32, bk=128):
+    """Placement-driven dispatch vs padded-to-global-H dispatch on a
+    SKEWED per-layer placement (interpret mode, so wall time tracks grid
+    work — the TPU statement is the same: grid rows = DMA'd KV blocks).
+
+    Padded: every slot's kernel runs the full (B, H, nk) grid because its
+    shape came from the config; resident: slot s runs (B, H_res(l, s), nk)
+    over exactly the rows the BlockGraph placement put there — on the
+    skewed split most slots do 1/8 of the padded work."""
+    from repro.core.blocks import graph_of, make_blocks
+    from repro.core.placement_bridge import placement_to_head_slices
+    from repro.kernels.decode_attention import decode_attention_resident
+
+    splits = [(5, 1, 1, 1), (1, 1, 5, 1)]     # ragged per-layer head counts
+    n_slots, n_layers = len(splits[0]), len(splits)
+    blocks = make_blocks(H, n_layers)
+    g = graph_of(blocks)
+    place = np.zeros(len(blocks), dtype=int)
+    for l, split in enumerate(splits):
+        hid = 0
+        for s, cnt in enumerate(split):
+            for _ in range(cnt):
+                place[g.heads[l][hid].index] = s
+                hid += 1
+    slices = placement_to_head_slices(place, blocks, n_slots)
+
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KvE, T, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KvE, T, dh), jnp.float32)
+    lens = jnp.full((B,), T, jnp.int32)
+    all_rows = jnp.arange(H, dtype=jnp.int32)
+
+    def padded_pass():
+        outs = []
+        for l in range(n_layers):
+            for s in range(n_slots):
+                out = decode_attention_resident(q, k, v, lens, all_rows,
+                                                bk=bk, interpret=True)
+                outs.append(out[:, slices[l][s]])   # discard non-resident
+        return outs
+
+    def resident_pass():
+        outs = []
+        for l in range(n_layers):
+            for s in range(n_slots):
+                rows = jnp.asarray(slices[l][s])
+                outs.append(decode_attention_resident(
+                    q, k, v, lens, rows, bk=bk, interpret=True))
+        return outs
+
+    us_pad = _time(padded_pass)
+    us_res = _time(resident_pass)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    err = 0.0
+    for (l, s), out in zip(((l, s) for l in range(n_layers)
+                           for s in range(n_slots)), resident_pass()):
+        sl = slices[l][s]
+        if len(sl):
+            err = max(err, float(jnp.abs(out - want[:, sl]).max()))
+    grid_pad = n_layers * n_slots * H
+    grid_res = sum(len(s) for per in slices for s in per)
+    return (us_pad, us_res,
+            f"grid_rows={grid_pad}",
+            f"allclose_err={err:.1e};grid_rows={grid_res};"
+            f"x_padded={us_pad / us_res:.2f}")
+
+
+def kernel_decode_rows():
+    us_pad, us_res, d_pad, d_res = bench_kernel_decode()
+    yield ("kernel_decode/padded_global_H", us_pad, d_pad)
+    yield ("kernel_decode/resident_slice", us_res, d_res)
 
 
 def rows():

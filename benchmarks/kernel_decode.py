@@ -1,0 +1,10 @@
+"""Benchmark group ``kernel_decode``: the placement-driven resident-slice
+flash-decode grid vs padded-to-global-H dispatch on a skewed per-layer
+placement (implementation in kernel_bench.bench_kernel_decode; registered
+separately so CI's fast profile can run it without the full kernel
+sweeps)."""
+from benchmarks.kernel_bench import kernel_decode_rows as rows
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(map(str, r)))

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.paper_setup import (LAYERED_DEADLINE, layered_blocks,
                                     layered_cost, layered_net, medium_net,

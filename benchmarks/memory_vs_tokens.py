@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.paper_setup import (medium_net, paper_blocks, paper_cost,
                                     policy_kwargs)
@@ -25,7 +24,6 @@ def run(n_tokens: int = N_TOKENS, seed: int = 11):
         pol = ALL_POLICIES[name](blocks, cost, **policy_kwargs(name))
         t0 = time.time()
         res = simulate(pol, blocks, cost, net, n_tokens, seed=seed)
-        overflow = [max(0.0, s.mem_max_device) for s in res.steps]
         out[name] = dict(
             total_gb={n: res.mem_total_series[n - 1] / 2 ** 30
                       for n in CHECKPOINTS},

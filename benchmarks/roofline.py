@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.configs import SHAPES, get_config
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16

@@ -4,10 +4,22 @@ Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--only small_scale,fig3,...]
                                           [--json DIR]
+                                          [--check BASELINE_DIR]
 
 ``--json DIR`` additionally writes each group's rows to
 ``DIR/BENCH_<group>.json`` as ``[{"name", "us_per_call", "derived"}, ...]``
 — the machine-readable perf trajectory.
+
+``--check BASELINE_DIR`` is the regression gate: every group that just
+ran is compared against ``BASELINE_DIR/BENCH_<group>.json``.  A row fails
+when its latency (``us_per_call``, lower is better) regresses by more
+than ``--check-tol`` (default 15%), or a throughput-like derived metric
+(``tok_s`` / ``x_*`` / ``speedup``, higher is better) or a quality ratio
+(``ratio_to_exact``, lower is better) regresses by the same margin;
+improvements always pass.  Baseline rows missing from the fresh run fail
+too (coverage loss), new rows are informational.  Refresh the committed
+baselines with ``--json benchmarks/baselines --only <groups>`` on the CI
+reference machine.
 """
 import argparse
 import json
@@ -23,8 +35,105 @@ MODULES = [
     ("serving_throughput", "benchmarks.serving_throughput"),  # engine tok/s
     ("pipelined", "benchmarks.pipelined_decode"),       # K-in-flight tok/s
     ("kernels", "benchmarks.kernel_bench"),             # per-kernel
+    ("kernel_decode", "benchmarks.kernel_decode"),      # resident vs padded
     ("roofline", "benchmarks.roofline"),                # deliverable (g)
 ]
+
+# derived-metric directions for --check: key PREFIX -> True when higher is
+# better (prefix, not substring, so e.g. a future max_err/idx_miss cannot
+# be misclassified).  Unlisted keys (roofline bytes, grid_rows, ...) are
+# not gated.
+HIGHER_BETTER = ("tok_s", "x_", "speedup")
+LOWER_BETTER = ("ratio_to_exact",)
+# Derived metrics that are RATIOS OF WALL TIMES from one run (e.g. the
+# kernel_decode resident-vs-padded speedup): same-machine, but the part
+# above the structural work ratio is interpreter/overhead-sensitive, so
+# they get the wall tolerance, not the strict deterministic one.
+WALL_RATIO = ("x_padded",)
+
+
+def parse_derived(derived: str) -> dict:
+    out = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        k, _, val = part.partition("=")
+        try:
+            out[k] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
+def _gated_metrics(row: dict):
+    """(metric name, value, higher_is_better) for every gated metric.
+
+    Rows that expose a deterministic derived metric are gated on THAT
+    (it is the row's actual claim — e.g. the pipelined group's tok_s and
+    small_scale's ratio_to_exact are machine-independent while their wall
+    times are whole-benchmark noise and CI-runner speed); only rows
+    without one are gated on raw us_per_call, which is meaningful when
+    the baseline came from the same class of machine (refresh with
+    --json on the CI reference runner; widen with --check-tol /
+    BENCH_CHECK_TOL elsewhere)."""
+    derived = parse_derived(row.get("derived", ""))
+    gated = [(k, v, True) for k, v in derived.items()
+             if k.startswith(HIGHER_BETTER)]
+    gated += [(k, v, False) for k, v in derived.items() if k in LOWER_BETTER]
+    if not gated:
+        gated = [("us_per_call", float(row["us_per_call"]), False)]
+    yield from gated
+
+
+def check_group(key: str, fresh_rows: list, baseline_dir: str,
+                tol: float, wall_tol: float) -> list:
+    """Compare one group's fresh rows to the committed baseline; returns a
+    list of human-readable failure strings (empty = pass).
+
+    ``tol`` gates the deterministic derived metrics; ``wall_tol`` gates
+    raw us_per_call (wall-clock) rows and the WALL_RATIO derived metrics,
+    which are only comparable within one machine class — CI on shared
+    runners widens it via BENCH_CHECK_TOL_WALL.  A baseline-gated metric that disappears from
+    the fresh row is a failure, not a skip: silently falling back to a
+    different metric would let a regression hide behind a rename."""
+    path = os.path.join(baseline_dir, f"BENCH_{key}.json")
+    if not os.path.exists(path):
+        return [f"{key}: no baseline at {path} (commit one with "
+                f"--json {baseline_dir})"]
+    with open(path) as f:
+        baseline = json.load(f)
+    fresh = {r["name"]: r for r in fresh_rows}
+    fails = []
+    for brow in baseline:
+        name = brow["name"]
+        frow = fresh.get(name)
+        if frow is None:
+            fails.append(f"{name}: present in baseline, missing from this "
+                         f"run (coverage loss)")
+            continue
+        fm = {k: v for k, v, _ in _gated_metrics(frow)}
+        # us_per_call is always present on the fresh row even when a
+        # newly added derived metric stops _gated_metrics from falling
+        # back to it — a pure coverage improvement must not read as
+        # "vanished".
+        fm.setdefault("us_per_call", float(frow["us_per_call"]))
+        for metric, base_val, higher in _gated_metrics(brow):
+            if metric not in fm:
+                fails.append(f"{name}: gated metric {metric} vanished "
+                             f"from this run (was {base_val:.3g})")
+                continue
+            if base_val == 0:
+                continue
+            t = wall_tol if metric == "us_per_call" \
+                or metric in WALL_RATIO else tol
+            val = fm[metric]
+            if higher and val < base_val * (1 - t):
+                fails.append(f"{name}: {metric} {val:.3g} < baseline "
+                             f"{base_val:.3g} - {t:.0%}")
+            elif not higher and val > base_val * (1 + t):
+                fails.append(f"{name}: {metric} {val:.3g} > baseline "
+                             f"{base_val:.3g} + {t:.0%}")
+    return fails
 
 
 def main() -> None:
@@ -33,10 +142,28 @@ def main() -> None:
                     help="comma-separated subset of benchmark groups")
     ap.add_argument("--json", default=None, metavar="DIR",
                     help="directory to write BENCH_<group>.json files")
+    ap.add_argument("--check", default=None, metavar="BASELINE_DIR",
+                    help="fail when a just-run group regresses vs the "
+                         "committed BENCH_<group>.json baselines")
+    ap.add_argument("--check-tol", type=float,
+                    default=float(os.environ.get("BENCH_CHECK_TOL", 0.15)),
+                    help="relative regression tolerance for --check "
+                         "(default 0.15 = 15%%; env BENCH_CHECK_TOL)")
+    env_wall = os.environ.get("BENCH_CHECK_TOL_WALL")
+    ap.add_argument("--check-tol-wall", type=float,
+                    default=float(env_wall) if env_wall is not None else None,
+                    help="tolerance for raw wall-clock (us_per_call) rows; "
+                         "defaults to --check-tol — widen on machines that "
+                         "differ from the baseline recorder (env "
+                         "BENCH_CHECK_TOL_WALL); 0 means exact")
     args = ap.parse_args()
+    wall_tol = args.check_tol if args.check_tol_wall is None \
+        else args.check_tol_wall
     only = set(args.only.split(",")) if args.only else None
+    json_dir = args.json
     print("name,us_per_call,derived")
     failed = []
+    check_fails = []
     for key, modname in MODULES:
         if only and key not in only:
             continue
@@ -53,12 +180,24 @@ def main() -> None:
             group_ok = False    # never record a truncated group as clean
             print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
-        if args.json and group_rows and group_ok:
-            os.makedirs(args.json, exist_ok=True)
-            path = os.path.join(args.json, f"BENCH_{key}.json")
+        # check BEFORE any --json write: with --json and --check aimed at
+        # the same directory the gate must compare against the OLD
+        # baseline, not the file we are about to refresh (comparing fresh
+        # rows to themselves would pass vacuously).
+        if args.check and group_ok:
+            check_fails.extend(check_group(key, group_rows, args.check,
+                                           args.check_tol, wall_tol))
+        if json_dir and group_rows and group_ok:
+            os.makedirs(json_dir, exist_ok=True)
+            path = os.path.join(json_dir, f"BENCH_{key}.json")
             with open(path, "w") as f:
                 json.dump(group_rows, f, indent=1)
-    if failed:
+    if check_fails:
+        print(f"[check] {len(check_fails)} regression(s) vs "
+              f"{args.check}:", file=sys.stderr)
+        for msg in check_fails:
+            print(f"[check]   {msg}", file=sys.stderr)
+    if failed or check_fails:
         sys.exit(1)
 
 

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.paper_setup import paper_blocks, paper_cost, policy_kwargs
 from repro.core import ALL_POLICIES, DeviceNetwork, make_blocks, simulate

@@ -84,7 +84,6 @@ def drive(eng, workload, max_steps: int = 20_000) -> dict:
 def run(n_requests: int = 12, n_slots: int = 4, max_seq: int = 64,
         seed: int = 0, verbose: bool = True) -> dict:
     cfg = default_cfg()
-    workload = make_workload(n_requests, seed)
     results = {}
     for name, cls in (("wave", WaveServingEngine),
                       ("continuous", ServingEngine)):

@@ -4,7 +4,6 @@ regime), printing per-policy latency/memory and the migration trace.
 
     PYTHONPATH=src python examples/migration_demo.py
 """
-import numpy as np
 
 from repro.core import ALL_POLICIES, DeviceNetwork, simulate
 from repro.core.blocks import CostModel, make_blocks

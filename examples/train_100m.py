@@ -7,7 +7,6 @@ with checkpoint/resume — the training end-to-end driver.
 this CPU container takes tens of minutes; --steps 30 demos the loop.)
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

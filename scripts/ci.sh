@@ -1,19 +1,45 @@
 #!/usr/bin/env bash
-# Tier-1 CI: install dev deps (best-effort when offline) and run the
-# default test profile (slow tests deselected; RUN_SLOW_TESTS=1 opts in).
+# Tier-1 CI: lint, install dev deps (best-effort when offline), run the
+# test suite in ONE pytest invocation, then gate the benchmark smoke
+# against the committed baselines (benchmarks/baselines/).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-python -m pip install -q -r requirements-dev.txt \
-    || echo "[ci] pip install failed (offline?) — using preinstalled deps"
+# 1. dev deps (ruff included): best-effort offline, but never swallow
+#    the error text
+if ! pip_log=$(python -m pip install -q -r requirements-dev.txt 2>&1); then
+    echo "[ci] pip install failed (offline?) — using preinstalled deps:"
+    echo "${pip_log}"
+fi
+
+# 2. lint — the first CHECK, fails fast before the multi-minute suite.
+#    (After the install so a fresh container actually has ruff; an
+#    offline container without it skips with a notice instead of lying.)
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "[ci] ruff not installed — lint skipped (pip install ruff)"
+fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-if [[ "${RUN_SLOW_TESTS:-0}" == "1" ]]; then
-    python -m pytest -x -q -m "slow" "$@"
-fi
-python -m pytest -x -q "$@"
 
-# benchmark smoke: the tiny-shape exact-solver group and the pipelined-
-# decode group must keep running (catches benchmark bit-rot without paying
-# for the full figure sweeps)
-python -m benchmarks.run --only small_scale,pipelined > /dev/null
+# 3. one pytest invocation: the default profile deselects slow tests
+#    (pyproject addopts); RUN_SLOW_TESTS=1 widens the -m expression so
+#    slow AND fast run in the same session instead of two from-scratch
+#    suite runs.
+if [[ "${RUN_SLOW_TESTS:-0}" == "1" ]]; then
+    python -m pytest -x -q -m "slow or not slow" "$@"
+else
+    python -m pytest -x -q "$@"
+fi
+
+# 4. benchmark smoke + regression gate: output stays visible (failures
+#    used to vanish into /dev/null) and a >15% latency / tokens-per-sec
+#    regression vs the committed baselines fails the build.  Raw
+#    wall-clock rows are only comparable within one machine class, so
+#    they default to a loose gate here (the deterministic tok_s / x_* /
+#    ratio_to_exact metrics stay at the strict 15%); override by
+#    exporting BENCH_CHECK_TOL_WALL.
+export BENCH_CHECK_TOL_WALL="${BENCH_CHECK_TOL_WALL:-0.60}"
+python -m benchmarks.run --only small_scale,pipelined,kernel_decode \
+    --check benchmarks/baselines

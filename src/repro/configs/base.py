@@ -6,8 +6,8 @@ Every assigned architecture is a :class:`ModelConfig`; shapes are
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration

@@ -27,8 +27,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ
-from repro.core.delay import memory_usage, total_delay
+from repro.core.blocks import Block, CostModel
+from repro.core.delay import total_delay
 from repro.core.network import DeviceNetwork
 from repro.core.scoring import score
 

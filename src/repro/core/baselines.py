@@ -33,7 +33,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.algorithm import ResourceAwareAssigner
-from repro.core.blocks import (Block, CostModel, FFN, HEAD, PROJ, graph_of,
+from repro.core.blocks import (Block, CostModel, graph_of,
                                make_blocks, replicate_placement)
 from repro.core.network import DeviceNetwork
 

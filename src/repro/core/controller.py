@@ -18,7 +18,7 @@ remain the layer-0 rows for single-layer callers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 

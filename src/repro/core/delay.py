@@ -66,7 +66,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ, graph_of
+from repro.core.blocks import Block, CostModel, graph_of
 from repro.core.network import DeviceNetwork
 
 

@@ -13,7 +13,7 @@ head-level TP layout models express via activation constraints).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -171,6 +171,92 @@ def kv_group_perms(perms: np.ndarray, group_size: int) -> np.ndarray:
             raise ValueError(f"induced KV permutation of layer {l} is not "
                              f"a permutation: {out[l]}")
     return out
+
+
+def placement_to_head_slices(place: np.ndarray, blocks: Sequence[Block],
+                             n_slots: int, layer: Optional[int] = None):
+    """Per-(layer, slot) resident head rows of a BlockGraph placement — the
+    gather maps the resident-slice decode kernel consumes
+    (``kernels.decode_attention.decode_attention_resident``).
+
+    Returns ``[layer][slot] -> np.ndarray`` of sorted logical head ids the
+    placement puts on that slot (``layer=l`` selects one layer's list).
+    The per-slot arrays are RAGGED — per-layer head counts per device are
+    not uniform under the per-layer block graph — and their union over
+    slots is exactly layer l's head set: every head's attention runs
+    exactly once, on the device that hosts it.  This is the same placement
+    the cost model prices and ``placement_to_perms`` snaps onto the SPMD
+    mesh, so kernel dispatch, pricing, and migration all read one source
+    of truth.  Devices fold onto slots modulo ``n_slots`` — the same
+    deliberate device→slot folding every bridge function uses (a network
+    larger than the engine's slot count is the normal serve-CLI case);
+    keep them in lockstep or the maps stop describing the applied
+    permutations."""
+    g = graph_of(blocks)
+    out = []
+    for l in range(g.n_layers):
+        buckets: List[List[int]] = [[] for _ in range(n_slots)]
+        for b in g.heads[l]:
+            buckets[int(place[b.index]) % n_slots].append(b.head_id)
+        out.append([np.array(sorted(bk), dtype=np.int32) for bk in buckets])
+    return out if layer is None else out[layer]
+
+
+def head_row_maps(place: np.ndarray, blocks: Sequence[Block], n_slots: int,
+                  total_rows: int, perms: Optional[np.ndarray] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stacked kernel gather maps for a full-model decode step.
+
+    Row l of the returned ``rows`` (n_layers, total_rows) array lists the
+    PHYSICAL q-head rows of layer l in slot-grouped placement order: the
+    concatenation over slots of each slot's resident slice
+    (``placement_to_head_slices``), padded q-head rows (logical ids ≥ the
+    placed head count) appended at the tail.  ``perms`` — the physical
+    layout actually applied to weights/caches (position p holds logical
+    head ``perms[l, p]``) — maps logical ids to physical positions; omit
+    it while the layout is still the identity.  Also returns ``inv``
+    (n_layers, total_rows), the scatter map with ``rows[l][inv[l]] ==
+    arange``: gathering the kernel's compacted output by ``inv[l]``
+    restores physical q order for the wo projection.
+
+    A single-slot dispatch uses one slice of ``placement_to_head_slices``
+    directly; this stacked form is the single-host (and per-layer-scan)
+    emulation — the union of every slot's resident dispatch."""
+    slices = placement_to_head_slices(place, blocks, n_slots)
+    n_layers = len(slices)
+    rows = np.empty((n_layers, total_rows), dtype=np.int32)
+    inv = np.empty_like(rows)
+    for l, per_slot in enumerate(slices):
+        logical = np.concatenate([s for s in per_slot] or
+                                 [np.empty(0, np.int32)])
+        n_placed = logical.shape[0]
+        if n_placed > total_rows:
+            raise ValueError(f"layer {l} places {n_placed} heads but the "
+                             f"model has only {total_rows} head rows")
+        pad = np.setdiff1d(np.arange(total_rows, dtype=np.int32), logical)
+        logical = np.concatenate([logical, pad])
+        if perms is not None:
+            pstack = np.atleast_2d(np.asarray(perms))
+            p = pstack[0] if pstack.shape[0] == 1 else pstack[l]
+            if p.shape[0] != total_rows:
+                raise ValueError(f"perm width {p.shape[0]} != head rows "
+                                 f"{total_rows}")
+            inv_perm = np.empty(total_rows, dtype=np.int32)
+            inv_perm[np.asarray(p, dtype=int)] = np.arange(total_rows)
+            rows[l] = inv_perm[logical]
+        else:
+            rows[l] = logical
+        inv[l] = np.argsort(rows[l])
+    return rows, inv
+
+
+def identity_head_rows(n_layers: int, total_rows: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """The trivial gather maps (physical == logical == dense grid): what a
+    kernelized decode runs before any controller plan exists."""
+    rows = np.broadcast_to(np.arange(total_rows, dtype=np.int32),
+                           (n_layers, total_rows)).copy()
+    return rows, rows.copy()
 
 
 def migration_pairs(old_perm: np.ndarray, new_perm: np.ndarray,

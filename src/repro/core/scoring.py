@@ -26,7 +26,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.blocks import Block, CostModel, FFN, HEAD, PROJ, graph_of
+from repro.core.blocks import Block, CostModel, HEAD, PROJ, graph_of
 from repro.core.network import DeviceNetwork
 
 

@@ -14,6 +14,19 @@ halved vs bf16, which is what makes the optimized decode cells approach
 the resident-state roofline on TPU.
 
 VMEM per step ≈ 2·bk·dh·bytes + dh·4; bk=1024, dh=128, bf16 ⇒ ~0.5 MB.
+
+``decode_attention_resident`` / ``decode_attention_int8_resident`` are the
+placement-driven variants: the grid is (B, R, nk) where R is the number of
+(layer, head) rows THIS device actually hosts, and the q/kv head rows to
+read arrive as scalar-prefetched gather maps (``rows`` / ``kv_rows``) that
+the BlockSpec index maps consult — exactly the block-sparse dispatch
+pattern, applied to the paper's per-(layer, device) head placement.  A
+slot hosting 3 of 32 heads at some layer runs 3/32 of the full grid with
+no padding to the global head count; ragged per-layer head splits (the
+block graph places heads per layer since PR 2) cost nothing beyond their
+resident rows.  ``placement_to_head_slices`` (core.placement_bridge)
+derives the row maps from the same BlockGraph placement the cost model
+and the migration machinery price.
 """
 from __future__ import annotations
 
@@ -114,36 +127,72 @@ def _kernel_int8(len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
 def decode_attention_int8(q, k_q8, k_sc, v_q8, v_sc, lengths, *,
                           bk: int = DEFAULT_BK, interpret: bool = False):
     """q: (B,H,dh) bf16/f32; k_q8/v_q8: (B,KvE,T,dh) int8;
-    k_sc/v_sc: (B,KvE,T) f32 per-(token, head) scales; lengths: (B,)."""
+    k_sc/v_sc: (B,KvE,T) f32 per-(token, head) scales; lengths: (B,).
+    The dense grid is the resident grid with the identity gather map
+    (rows = arange(H)), so this is a thin wrapper — one pallas_call
+    builder per kernel body, not two to keep in sync."""
+    rows = jnp.arange(q.shape[1], dtype=jnp.int32)
+    return decode_attention_int8_resident(q, k_q8, k_sc, v_q8, v_sc,
+                                          lengths, rows, bk=bk,
+                                          interpret=interpret)
+
+
+def _kernel_resident(len_ref, qr_ref, kr_ref, *rest, scale, bk, nk):
+    """Resident-slice wrapper of ``_kernel``: the two extra scalar-prefetch
+    refs (q/kv gather maps) are consumed by the BlockSpec index maps, not
+    the body — the body only reads the valid length."""
+    _kernel(len_ref, *rest, scale=scale, bk=bk, nk=nk)
+
+
+def _kernel_int8_resident(len_ref, qr_ref, kr_ref, *rest, scale, bk, nk):
+    _kernel_int8(len_ref, *rest, scale=scale, bk=bk, nk=nk)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_resident(q, k, v, lengths, rows, kv_rows=None, *,
+                              bk: int = DEFAULT_BK, interpret: bool = False):
+    """Flash-decode over only the head rows resident on this device.
+
+    q: (B, H, dh) — the FULL q-head axis in its physical layout; k, v:
+    (B, KvE, T, dh); lengths: (B,) int32 valid cache lengths; rows: (R,)
+    int32 physical q-head rows this device hosts (R ≤ H, ragged per
+    (layer, slot)); kv_rows: (R,) int32 KV rows (defaults to
+    ``rows // (H // KvE)`` — group-consistent layouts keep the GQA
+    q→kv association under this rule even after migrations).
+
+    Grid (B, R, nk): row r of the grid computes head ``rows[r]``; the
+    gather maps are scalar-prefetched so the DMA engine reads exactly the
+    resident K/V blocks.  Returns the COMPACTED (B, R, dh) slice in
+    ``rows`` order (callers holding the full head axis scatter it back
+    with the inverse map).
+    """
     B, H, dh = q.shape
-    KvE, T = k_q8.shape[1], k_q8.shape[2]
+    KvE, T = k.shape[1], k.shape[2]
     assert H % KvE == 0
+    G = H // KvE
+    if kv_rows is None:
+        kv_rows = rows // G
+    R = rows.shape[0]
     bk = min(bk, T)
     assert T % bk == 0, (T, bk)
     nk = T // bk
-    G = H // KvE
     scale = 1.0 / math.sqrt(dh)
-    q4 = q[:, :, None, :]
-    ks4 = k_sc[..., None]                                      # (B,KvE,T,1)
-    vs4 = v_sc[..., None]
+    q4 = q[:, :, None, :]                                  # (B,H,1,dh)
 
-    kernel = functools.partial(_kernel_int8, scale=scale, bk=bk, nk=nk)
+    kernel = functools.partial(_kernel_resident, scale=scale, bk=bk, nk=nk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(B, H, nk),
+        num_scalar_prefetch=3,
+        grid=(B, R, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, 1, dh), lambda b, h, ik, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, dh),
+                         lambda b, h, ik, lens, qr, kr: (b, qr[h], 0, 0)),
             pl.BlockSpec((1, 1, bk, dh),
-                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, bk, 1),
-                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
+                         lambda b, h, ik, lens, qr, kr: (b, kr[h], ik, 0)),
             pl.BlockSpec((1, 1, bk, dh),
-                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, bk, 1),
-                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
+                         lambda b, h, ik, lens, qr, kr: (b, kr[h], ik, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, 1, dh),
-                               lambda b, h, ik, lens: (b, h, 0, 0)),
+                               lambda b, h, ik, lens, qr, kr: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
@@ -153,9 +202,68 @@ def decode_attention_int8(q, k_q8, k_sc, v_q8, v_sc, lengths, *,
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, 1, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, R, 1, dh), q.dtype),
         interpret=interpret,
-    )(lengths.astype(jnp.int32), q4, k_q8, ks4, v_q8, vs4)
+    )(lengths.astype(jnp.int32), rows.astype(jnp.int32),
+      kv_rows.astype(jnp.int32), q4, k, v)
+    return out[:, :, 0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_int8_resident(q, k_q8, k_sc, v_q8, v_sc, lengths, rows,
+                                   kv_rows=None, *, bk: int = DEFAULT_BK,
+                                   interpret: bool = False):
+    """Resident-slice variant of ``decode_attention_int8`` (kept in sync):
+    same (B, R, nk) grid and scalar-prefetched gather maps as
+    ``decode_attention_resident``, fused int8 dequant in VMEM.  Returns
+    the compacted (B, R, dh) slice in ``rows`` order."""
+    B, H, dh = q.shape
+    KvE, T = k_q8.shape[1], k_q8.shape[2]
+    assert H % KvE == 0
+    G = H // KvE
+    if kv_rows is None:
+        kv_rows = rows // G
+    R = rows.shape[0]
+    bk = min(bk, T)
+    assert T % bk == 0, (T, bk)
+    nk = T // bk
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q[:, :, None, :]
+    ks4 = k_sc[..., None]                                      # (B,KvE,T,1)
+    vs4 = v_sc[..., None]
+
+    kernel = functools.partial(_kernel_int8_resident, scale=scale, bk=bk,
+                               nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, R, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh),
+                         lambda b, h, ik, lens, qr, kr: (b, qr[h], 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, ik, lens, qr, kr: (b, kr[h], ik, 0)),
+            pl.BlockSpec((1, 1, bk, 1),
+                         lambda b, h, ik, lens, qr, kr: (b, kr[h], ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, ik, lens, qr, kr: (b, kr[h], ik, 0)),
+            pl.BlockSpec((1, 1, bk, 1),
+                         lambda b, h, ik, lens, qr, kr: (b, kr[h], ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda b, h, ik, lens, qr, kr: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R, 1, dh), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), rows.astype(jnp.int32),
+      kv_rows.astype(jnp.int32), q4, k_q8, ks4, v_q8, vs4)
     return out[:, :, 0, :]
 
 
@@ -163,40 +271,9 @@ def decode_attention_int8(q, k_q8, k_sc, v_q8, v_sc, lengths, *,
 def decode_attention(q, k, v, lengths, *, bk: int = DEFAULT_BK,
                      interpret: bool = False):
     """q: (B,H,dh); k,v: (B,KvE,T,dh); lengths: (B,) int32 valid lengths.
-    Returns (B,H,dh)."""
-    B, H, dh = q.shape
-    KvE, T = k.shape[1], k.shape[2]
-    assert H % KvE == 0
-    bk = min(bk, T)
-    assert T % bk == 0, (T, bk)
-    nk = T // bk
-    G = H // KvE
-    scale = 1.0 / math.sqrt(dh)
-    q4 = q[:, :, None, :]                                  # (B,H,1,dh)
-
-    kernel = functools.partial(_kernel, scale=scale, bk=bk, nk=nk)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(B, H, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, dh), lambda b, h, ik, lens: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, bk, dh),
-                         lambda b, h, ik, lens: (b, h // G, ik, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, 1, dh),
-                               lambda b, h, ik, lens: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, dh), jnp.float32),
-        ],
-    )
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, 1, dh), q.dtype),
-        interpret=interpret,
-    )(lengths.astype(jnp.int32), q4, k, v)
-    return out[:, :, 0, :]
+    Returns (B,H,dh).  Thin wrapper over the resident variant with the
+    identity gather map (rows = arange(H)) — see
+    :func:`decode_attention_int8` for the rationale."""
+    rows = jnp.arange(q.shape[1], dtype=jnp.int32)
+    return decode_attention_resident(q, k, v, lengths, rows, bk=bk,
+                                     interpret=interpret)

@@ -10,7 +10,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.decode_attention import (
+    decode_attention as _decode,
+    decode_attention_int8_resident as _decode_i8_res,
+    decode_attention_resident as _decode_res,
+)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rwkv6_kernel import rwkv6_chunked as _rwkv6
 
@@ -34,6 +38,40 @@ def decode_attention_bshd(q, k, v, lengths, *, interpret: bool | None = None):
     interpret = _on_cpu() if interpret is None else interpret
     o = _decode(q[:, 0], k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
                 lengths, interpret=interpret)
+    return o[:, None]
+
+
+def decode_attention_resident_bshd(q, k, v, lengths, rows, kv_rows=None, *,
+                                   inv_rows=None,
+                                   interpret: bool | None = None):
+    """Placement-driven decode: model layout q (B,1,H,dh), cache k/v
+    (B,T,KvE,dh), ``rows`` (R,) the physical q-head rows this dispatch
+    covers (the device's resident slice, slot-grouped).  Returns the
+    compacted (B,1,R,dh) slice in ``rows`` order — or, when ``inv_rows``
+    (the scatter map with R == H) is given, the full (B,1,H,dh) tensor in
+    physical q order, ready for the wo projection."""
+    interpret = _on_cpu() if interpret is None else interpret
+    o = _decode_res(q[:, 0], k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), lengths, rows, kv_rows,
+                    interpret=interpret)
+    if inv_rows is not None:
+        o = jnp.take(o, inv_rows, axis=1)
+    return o[:, None]
+
+
+def decode_attention_int8_resident_bshd(q, k_q8, k_sc, v_q8, v_sc, lengths,
+                                        rows, kv_rows=None, *, inv_rows=None,
+                                        interpret: bool | None = None):
+    """int8-KV twin of :func:`decode_attention_resident_bshd`: cache
+    k_q8/v_q8 (B,T,KvE,dh) int8 with per-(token, head) scales k_sc/v_sc
+    (B,T,KvE) — dequantized in VMEM by the fused kernel."""
+    interpret = _on_cpu() if interpret is None else interpret
+    o = _decode_i8_res(q[:, 0], k_q8.transpose(0, 2, 1, 3),
+                       k_sc.transpose(0, 2, 1), v_q8.transpose(0, 2, 1, 3),
+                       v_sc.transpose(0, 2, 1), lengths, rows, kv_rows,
+                       interpret=interpret)
+    if inv_rows is not None:
+        o = jnp.take(o, inv_rows, axis=1)
     return o[:, None]
 
 

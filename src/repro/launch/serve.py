@@ -35,6 +35,10 @@ def main(argv=None):
     ap.add_argument("--mixed-lengths", action="store_true",
                     help="vary prompt lengths per request (the workload "
                          "continuous batching exists for)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="decode through the placement-driven Pallas "
+                         "flash-decode kernel (auto-interpret on CPU); "
+                         "greedy streams must match the jnp path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -42,7 +46,7 @@ def main(argv=None):
         cfg = reduced_for_cpu(cfg)
     eng = make_engine(cfg, mode=args.engine, n_slots=args.slots,
                       max_seq=args.prompt_len + args.tokens + 8,
-                      lam=args.lam)
+                      lam=args.lam, use_kernel=args.use_kernel)
     print(f"[serve] engine: {type(eng).__name__}")
     if args.straggler >= 0:
         eng.net.inject_straggler(args.straggler, slowdown=20.0)

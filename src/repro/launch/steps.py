@@ -2,10 +2,9 @@
 the dry-run, and the examples."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.optim.adamw import AdamW, AdamWState
 

@@ -38,10 +38,12 @@ def build_model(cfg: ModelConfig, *, tp: int = 1, part: Partitioner = NULL,
         return RWKV6Model(cfg, tp=tp, part=part, remat=remat,
                           use_kernel=kw.get("use_kernel", False))
     if cfg.family == "hybrid":
-        return Zamba2Model(cfg, tp=tp, part=part, remat=remat)
+        return Zamba2Model(cfg, tp=tp, part=part, remat=remat,
+                           use_kernel=kw.get("use_kernel", False))
     return TransformerLM(cfg, tp=tp, part=part, remat=remat,
                          capacity_moe=kw.get("capacity_moe", False),
-                         capacity_factor=kw.get("capacity_factor", 1.25))
+                         capacity_factor=kw.get("capacity_factor", 1.25),
+                         use_kernel=kw.get("use_kernel", False))
 
 
 # ---------------------------------------------------------------------------

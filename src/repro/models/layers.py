@@ -16,13 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.partitioning import NULL, Partitioner
+from repro.models.partitioning import Partitioner
 from repro.models.quantization import wt
 
 # ---------------------------------------------------------------------------
@@ -311,9 +311,48 @@ def causal_mask(q_positions, kv_positions, window: int = 0):
     return m[:, None, None, :, :]
 
 
+def _decode_lengths(cache_pos, B: int):
+    """Valid-cache-length vector for the flash-decode kernel: the current
+    token writes at ``cache_pos`` and attends positions <= its own, so the
+    kernel's per-row length is ``pos + 1`` (scalar positions broadcast —
+    lock-step batches share one depth)."""
+    cp = jnp.asarray(cache_pos, jnp.int32)
+    if cp.ndim == 0:
+        cp = jnp.broadcast_to(cp, (B,))
+    return cp + 1
+
+
+def _head_rows_or_identity(head_rows, head_inv, n_rows: int):
+    """Gather/scatter maps for the resident-slice kernel; identity (dense
+    grid over all rows, no scatter) when no placement maps are threaded."""
+    if head_rows is None:
+        return jnp.arange(n_rows, dtype=jnp.int32), None
+    return head_rows, head_inv
+
+
+def _decode_kernel_ok(T: int) -> bool:
+    """The flash-decode kernel streams the cache in ``bk``-sized blocks;
+    a cache extent that does not tile (T > bk and T % bk != 0 — e.g. the
+    1601-token VLM image stub) keeps the jnp path."""
+    from repro.kernels.decode_attention import DEFAULT_BK
+    return T % min(DEFAULT_BK, T) == 0
+
+
+def _project_out(p: dict, out, part: Partitioner, *, gate=None):
+    """Shared attention output tail: wo projection (plus the VLM
+    cross-attention gate when given), constrained to the residual layout
+    — one definition so the kernel and jnp branches cannot diverge."""
+    out = jnp.einsum("bshk,hkd->bsd", out, wt(p, "wo", out.dtype))
+    if gate is not None:
+        out = out * jnp.tanh(gate).astype(out.dtype)
+    return part.constrain(out, ("batch", "res_seq", "d_model"))
+
+
 def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
                          positions, part: Partitioner, *,
-                         cache=None, cache_pos=None, window: int = 0):
+                         cache=None, cache_pos=None, window: int = 0,
+                         use_kernel: bool = False, head_rows=None,
+                         head_inv=None):
     """Causal self-attention with optional KV cache.
 
     cache: dict {"k","v"[, "pos"]} of (B, cache_len, KvE, dh) buffers.
@@ -326,6 +365,14 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
       cache, S == 1 only): row b writes its new K/V at its own position
       ``cache_pos[b]`` and the causal mask is taken per row, so slots at
       different sequence depths decode in one batch.
+    use_kernel: S == 1 linear-cache decode dispatches to the Pallas
+      flash-decode kernel (``ops.decode_attention_resident_bshd``; the
+      int8 cache uses the fused int8 variant) instead of the jnp path.
+      ``head_rows``/``head_inv`` are that kernel's per-layer gather/
+      scatter maps — the PHYSICAL q-head rows in slot-grouped placement
+      order (``placement_bridge.head_row_maps``); None runs the identity
+      (dense) grid.  Ring caches and windowed attention keep the jnp path
+      (their validity set is not a prefix).
     Returns (out, new_cache).
     """
     B, S = x.shape[0], x.shape[1]
@@ -350,8 +397,7 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
             # ``window`` tokens into the ring buffer (slot t%window <- pos t).
             mask = causal_mask(positions, positions, window)
             out = attend(k, v, positions, mask)
-            out = jnp.einsum("bshk,hkd->bsd", out, wt(p, "wo", out.dtype))
-            out = part.constrain(out, ("batch", "res_seq", "d_model"))
+            out = _project_out(p, out, part)
             if S >= window:
                 tail_k, tail_v = k[:, -window:], v[:, -window:]
                 tail_pos = positions[0, -window:].astype(jnp.int32)
@@ -395,14 +441,22 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
             ck = part.constrain(ck, ("batch", "cache_seq", "kv_heads", None))
             cv = part.constrain(cv, ("batch", "cache_seq", "kv_heads", None))
             new_cache = dict(cache, k=ck, v=cv, k_sc=cks, v_sc=cvs)
+            if use_kernel and S == 1 and window == 0 \
+                    and _decode_kernel_ok(cache_len):
+                from repro.kernels import ops
+                rows, inv = _head_rows_or_identity(head_rows, head_inv,
+                                                   q.shape[2])
+                out = ops.decode_attention_int8_resident_bshd(
+                    q, ck, cks, cv, cvs, _decode_lengths(cache_pos, B),
+                    rows, inv_rows=inv)
+                return _project_out(p, out, part), new_cache
             kv_pos = jnp.broadcast_to(
                 jnp.arange(cache_len, dtype=jnp.int32)[None, :], (B, cache_len))
             kd = (ck.astype(jnp.float32) * cks[..., None]).astype(x.dtype)
             vd = (cv.astype(jnp.float32) * cvs[..., None]).astype(x.dtype)
             mask = causal_mask(positions, kv_pos, window)
             out = attend(kd, vd, kv_pos, mask)
-            out = jnp.einsum("bshk,hkd->bsd", out, wt(p, "wo", out.dtype))
-            return part.constrain(out, ("batch", "res_seq", "d_model")), new_cache
+            return _project_out(p, out, part), new_cache
         elif getattr(cache_pos, "ndim", 0) == 1:
             # per-slot linear cache write (continuous batching, S == 1):
             # scatter row b's new K/V to its own position. Out-of-range
@@ -425,21 +479,41 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
         new_cache = dict(cache, k=ck, v=cv)
         if slot_pos is not None:
             new_cache["pos"] = slot_pos
+        if use_kernel and S == 1 and window == 0 and slot_pos is None \
+                and _decode_kernel_ok(cache_len):
+            # linear-cache decode hot path: the Pallas flash-decode kernel
+            # over this dispatch's resident head rows (identity = all)
+            from repro.kernels import ops
+            rows, inv = _head_rows_or_identity(head_rows, head_inv,
+                                               q.shape[2])
+            out = ops.decode_attention_resident_bshd(
+                q, ck, cv, _decode_lengths(cache_pos, B), rows,
+                inv_rows=inv)
+            return _project_out(p, out, part), new_cache
         mask = causal_mask(positions, kv_pos, window)
         out = attend(ck, cv, kv_pos, mask)
     else:
         mask = causal_mask(positions, positions, window)
         out = attend(k, v, positions, mask)
-    out = jnp.einsum("bshk,hkd->bsd", out, wt(p, "wo", out.dtype))
-    return part.constrain(out, ("batch", "res_seq", "d_model")), new_cache
+    return _project_out(p, out, part), new_cache
 
 
 def cross_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
                           part: Partitioner, *, kv_embeds=None, kv_cache=None,
-                          kv_mask=None):
+                          kv_mask=None, use_kernel: bool = False):
     """Gated cross-attention (llama-3.2-vision).  K/V come either from
     ``kv_embeds`` (B, n_img, D) — projected here and returned as a static
-    cache — or from a previously computed ``kv_cache`` {"k","v"}."""
+    cache — or from a previously computed ``kv_cache`` {"k","v"}.
+
+    ``use_kernel`` dispatches S == 1 decode to the flash-decode kernel
+    with per-row lengths = ``kv_mask.sum(-1)``: the serving engine's image
+    buffers are right-padded (valid rows form a prefix), which is exactly
+    the kernel's length-masked validity model.  A traced ``kv_mask`` (any
+    jitted caller, including the engine) bypasses the eager prefix check
+    below, so jitted callers MUST guarantee right-padded masks by
+    construction — the engine does.  Fully masked rows are patched to the
+    jnp path's value (uniform average of V) so streams match even with a
+    trained, nonzero gate."""
     B, S = x.shape[0], x.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, wt(p, "wq", x.dtype))
     if cfg.qkv_bias:
@@ -456,11 +530,38 @@ def cross_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
         v = part.constrain(v, ("batch", "img_seq", "kv_heads", None))
         kv_cache = {"k": k, "v": v}
     k, v = kv_cache["k"], kv_cache["v"]
+    if use_kernel and S == 1 and _decode_kernel_ok(k.shape[1]):
+        from repro.kernels import ops
+        I = k.shape[1]
+        if kv_mask is None:
+            lens = jnp.full((B,), I, jnp.int32)
+        else:
+            lens = jnp.sum(kv_mask, axis=-1).astype(jnp.int32)
+            if not isinstance(kv_mask, jax.core.Tracer):
+                # The kernel models validity as a per-row length, so a
+                # concrete mask must be prefix-contiguous (right-padded);
+                # a scattered mask would silently attend to wrong slots.
+                pref = jnp.arange(I, dtype=jnp.int32)[None, :] < lens[:, None]
+                if not bool(jnp.all(jnp.asarray(kv_mask, bool) == pref)):
+                    raise ValueError(
+                        "use_kernel cross-attention needs a prefix "
+                        "(right-padded) kv_mask; got a non-contiguous "
+                        "validity set — use the jnp path instead")
+        rows = jnp.arange(q.shape[2], dtype=jnp.int32)
+        out = ops.decode_attention_resident_bshd(q, k, v, lens, rows)
+        if kv_mask is not None:
+            # Fully-masked rows: the kernel's length model yields 0, but
+            # the jnp path softmaxes a uniformly -1e30 score row into the
+            # uniform average of V — match it so use_kernel streams stay
+            # equal even with a trained (nonzero) gate.
+            G = q.shape[2] // v.shape[2]
+            vm = jnp.repeat(jnp.mean(v, axis=1), G, axis=1)[:, None]
+            out = jnp.where((lens == 0)[:, None, None, None],
+                            vm.astype(out.dtype), out)
+        return _project_out(p, out, part, gate=p["gate"]), kv_cache
     mask = None if kv_mask is None else kv_mask[:, None, None, None, :]
     out = attention_scores(q, k, v, mask, part)
-    out = jnp.einsum("bshk,hkd->bsd", out, wt(p, "wo", out.dtype))
-    out = out * jnp.tanh(p["gate"]).astype(out.dtype)
-    return part.constrain(out, ("batch", "res_seq", "d_model")), kv_cache
+    return _project_out(p, out, part, gate=p["gate"]), kv_cache
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.partitioning import NULL, Partitioner
+from repro.models.partitioning import Partitioner
 
 
 def mamba_dims(cfg: ModelConfig):
@@ -85,7 +85,6 @@ def ssd_scan(xh, Bt, Ct, a, dtv, h0):
 def mamba_block(cfg: ModelConfig, p: dict, x, state: Dict, part: Partitioner):
     """x: (B,S,D); state {"conv": (B,cw-1,C), "ssm": (B,nh,dh,ns)} or zeros.
     Returns (out, new_state)."""
-    D = cfg.d_model
     d_in, nh, dh, ns, cw = mamba_dims(cfg)
     B, S, _ = x.shape
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 # base (unstacked) rank of each quantizable weight; leading stack axes

@@ -12,8 +12,7 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -36,12 +35,18 @@ class TransformerLM:
 
     def __init__(self, cfg: ModelConfig, *, tp: int = 1,
                  part: Partitioner = NULL, remat: str = "none",
-                 capacity_moe: bool = False, capacity_factor: float = 1.25):
+                 capacity_moe: bool = False, capacity_factor: float = 1.25,
+                 use_kernel: bool = False):
         self.cfg = cfg
         self.tp = tp
         self.part = part
         self.hd = L.head_dims(cfg, tp)
         self.remat = remat
+        # decode attention via the Pallas flash-decode kernel; the decode
+        # state may carry per-layer "head_rows"/"head_inv" gather maps
+        # (placement_bridge.head_row_maps) so each layer's kernel grid is
+        # the slot-grouped resident slice the controller placed.
+        self.use_kernel = use_kernel
         self.capacity_moe = capacity_moe
         self.capacity_factor = capacity_factor
         self.is_vlm = cfg.family == "vlm"
@@ -113,7 +118,8 @@ class TransformerLM:
         return L.pin_layer_slice(xs)
 
     # ----------------------------------------------------------------- layer
-    def _layer(self, p: dict, x, positions, cache, cache_pos):
+    def _layer(self, p: dict, x, positions, cache, cache_pos,
+               head_rows=None, head_inv=None):
         cfg, part = self.cfg, self.part
         h = L.apply_norm(cfg, p, "ln1", x)
         # explicit SP->TP boundary ON THE BF16 TENSOR: norms run in the
@@ -124,7 +130,9 @@ class TransformerLM:
         h = part.constrain(h, ("batch", "seq", "d_model"))
         attn_out, new_cache = L.self_attention_block(
             cfg, p["attn"], self.hd, h, positions, part,
-            cache=cache, cache_pos=cache_pos, window=self.window)
+            cache=cache, cache_pos=cache_pos, window=self.window,
+            use_kernel=self.use_kernel, head_rows=head_rows,
+            head_inv=head_inv)
         x = x + attn_out
         h = L.apply_norm(cfg, p, "ln2", x)
         h = part.constrain(h, ("batch", "seq", "d_model"))
@@ -143,7 +151,8 @@ class TransformerLM:
         cfg, part = self.cfg, self.part
         h = L.apply_norm(cfg, p, "ln1", x)
         attn_out, _ = L.cross_attention_block(cfg, p["attn"], self.hd, h, part,
-                                              kv_cache=img_kv, kv_mask=img_mask)
+                                              kv_cache=img_kv, kv_mask=img_mask,
+                                              use_kernel=self.use_kernel)
         x = x + attn_out
         h = L.apply_norm(cfg, p, "ln2", x)
         mlp_out = L.mlp_block(cfg, p["mlp"], h, part)
@@ -167,8 +176,14 @@ class TransformerLM:
 
     # --------------------------------------------------------------- forward
     def _run_layers(self, params, x, positions, cache, cache_pos,
-                    img_kv=None, img_mask=None):
-        """Scan over layers. cache: stacked {"k","v"[,"pos"]} or None."""
+                    img_kv=None, img_mask=None, head_rows=None,
+                    head_inv=None):
+        """Scan over layers. cache: stacked {"k","v"[,"pos"]} or None.
+        ``head_rows``/``head_inv``: stacked (n_layers, Hp) kernel gather/
+        scatter maps scanned alongside the cache, so layer l's decode
+        dispatch reads layer l's resident-slice row map (dense archs only
+        — VLM caches are (G, 4, ...) stacks whose migrations are
+        all-layers-equal, so identity maps stay correct there)."""
         remat_policy = REMAT_POLICIES[self.remat]
 
         def body(carry, xs):
@@ -184,9 +199,9 @@ class TransformerLM:
                 sp = jax.tree.map(lambda a: a[3], self_p)
                 x, _, a = self._layer(sp, x, positions, None, cache_pos)
                 return (x, aux + a), None
-            layer_p, layer_cache = xs
+            layer_p, layer_cache, rows, inv = xs
             x, new_cache, a = self._layer(layer_p, x, positions, layer_cache,
-                                          cache_pos)
+                                          cache_pos, rows, inv)
             return (x, aux + a), new_cache
 
         if self.remat != "none":
@@ -202,7 +217,7 @@ class TransformerLM:
             xs = (params["layers"], params["cross_layers"], img_kv)
             (x, aux), _ = jax.lax.scan(body, (x, aux0), xs)
             return x, None, aux
-        xs = (params["layers"], cache)
+        xs = (params["layers"], cache, head_rows, head_inv)
         (x, aux), new_cache = jax.lax.scan(body, (x, aux0), xs)
         return x, new_cache, aux
 
@@ -331,7 +346,8 @@ class TransformerLM:
             positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
         x, new_cache, _ = self._run_layers(
             params, x, positions, state["cache"], pos,
-            img_kv=state.get("img_kv"), img_mask=state.get("img_mask"))
+            img_kv=state.get("img_kv"), img_mask=state.get("img_mask"),
+            head_rows=state.get("head_rows"), head_inv=state.get("head_inv"))
         x = L.apply_norm(cfg, params, "ln_f", x)
         logits = L.unembed(cfg, params, x, part)
         if per_slot:

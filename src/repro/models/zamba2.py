@@ -9,7 +9,6 @@ transformer: the paper's technique applies to the shared block
 """
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +21,14 @@ from repro.models.partitioning import NULL, Partitioner
 
 class Zamba2Model:
     def __init__(self, cfg: ModelConfig, *, tp: int = 1, part: Partitioner = NULL,
-                 remat: str = "none"):
+                 remat: str = "none", use_kernel: bool = False):
         self.cfg = cfg
         self.part = part
         self.remat = remat
+        # Shared-attention decode through the Pallas flash-decode kernel
+        # over the identity (dense) grid: the hybrid cache is one shared
+        # block per supergroup, so there are no per-layer resident maps.
+        self.use_kernel = use_kernel
         self.hd = L.head_dims(cfg, tp)
         assert cfg.shared_attn_every > 0
         assert cfg.n_layers % cfg.shared_attn_every == 0
@@ -56,7 +59,7 @@ class Zamba2Model:
         h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
         attn_out, new_cache = L.self_attention_block(
             cfg, p["attn"], self.hd, h, positions, part,
-            cache=cache, cache_pos=cache_pos)
+            cache=cache, cache_pos=cache_pos, use_kernel=self.use_kernel)
         x = x + attn_out
         h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
         return x + L.mlp_block(cfg, p["mlp"], h, part), new_cache

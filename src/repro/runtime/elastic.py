@@ -10,8 +10,7 @@ cluster for free.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

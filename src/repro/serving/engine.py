@@ -115,14 +115,20 @@ class _EngineBase:
                  max_seq: int = 512, lam: int = 16, seed: int = 0,
                  net: Optional[DeviceNetwork] = None, cost_cfg=None,
                  part=None, tp: int = 1, greedy: bool = True,
-                 layer_mode: str = "graph", pipeline_k: int = 1):
+                 layer_mode: str = "graph", pipeline_k: int = 1,
+                 use_kernel: bool = False):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.greedy = greedy
         self.pipeline_k = max(1, int(pipeline_k))
+        # use_kernel: decode attention runs the Pallas flash-decode kernel
+        # (auto-interpreted on CPU) with its grid derived from the
+        # controller's placement — see _refresh_head_rows.
+        self.use_kernel = use_kernel
         from repro.models.partitioning import NULL
-        self.model = build_model(cfg, tp=tp, part=part or NULL)
+        self.model = build_model(cfg, tp=tp, part=part or NULL,
+                                 use_kernel=use_kernel)
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self.queue: List[Request] = []
         self.finished: List[Request] = []
@@ -353,8 +359,27 @@ class ServingEngine(_EngineBase):
             else default_buckets(self.max_seq)
         self.is_vlm = cfg.family == "vlm"
         self.img_tokens = img_tokens
+        # kernelized decode: per-layer gather maps (physical q-head rows in
+        # slot-grouped placement order) threaded through the decode state.
+        # VLM caches are (G, 4, ...) stacks migrated all-layers-equal, so
+        # the identity maps the model defaults to stay correct there.
+        self._rows_layers = 0
+        if self.use_kernel and not self.is_vlm:
+            hd = self.model.hd
+            width = self.net.n_devices * self.controller.cfg.heads_per_slot
+            if width != hd.Hp:
+                raise UnsupportedArchError(
+                    f"use_kernel: the bridge's {self.net.n_devices}x"
+                    f"{self.controller.cfg.heads_per_slot} head-position "
+                    f"space must equal the model's {hd.Hp} padded heads "
+                    f"for placement-derived kernel grids")
+            from repro.core.placement_bridge import identity_head_rows
+            self._rows_layers = cfg.n_layers
+            self._head_rows, self._head_inv = identity_head_rows(
+                self._rows_layers, hd.Hp)
+            self._phys_perms = None   # layout actually applied to weights
         self.states: List[Dict[str, Any]] = [
-            self._fresh_state(self.rows_per_group)
+            self._attach_head_rows(self._fresh_state(self.rows_per_group))
             for _ in range(self.pipeline_k)]
         self.slots: List[Optional[Request]] = [None] * self.n_slots
         self._next = np.zeros(self.n_slots, np.int32)
@@ -382,6 +407,36 @@ class ServingEngine(_EngineBase):
                 if img_mask is None else jnp.asarray(img_mask)
         return self.model.init_decode_state(
             self.params, batch, max_seq or self.max_seq, **kw)
+
+    # ----------------------------------------------------- kernel row maps
+    def _attach_head_rows(self, state: Dict[str, Any]) -> Dict[str, Any]:
+        if not self._rows_layers:
+            return state
+        return dict(state, head_rows=jnp.asarray(self._head_rows),
+                    head_inv=jnp.asarray(self._head_inv))
+
+    def _refresh_head_rows(self, plan: dict):
+        """Rebuild the kernel gather maps from the controller's plan: the
+        resident slices come from the BlockGraph placement
+        (``placement_to_head_slices`` via ``head_row_maps``) mapped
+        through the physical layout actually applied to weights/caches —
+        after a migration the maps MUST be rebuilt or the grid would
+        dispatch stale rows.  Row maps are data (same shape every
+        interval), so no decode recompile happens."""
+        if not self._rows_layers:
+            return
+        from repro.core.placement_bridge import head_row_maps
+        self._head_rows, self._head_inv = head_row_maps(
+            plan["place"], self.controller.blocks, self.net.n_devices,
+            self.model.hd.Hp, perms=self._phys_perms)
+        if self._rows_layers != self._head_rows.shape[0]:
+            # columns-mode controller: one row for every model layer
+            self._head_rows = np.broadcast_to(
+                self._head_rows[0], (self._rows_layers,
+                                     self._head_rows.shape[1])).copy()
+            self._head_inv = np.broadcast_to(
+                self._head_inv[0], self._head_rows.shape).copy()
+        self.states = [self._attach_head_rows(st) for st in self.states]
 
     # ------------------------------------------------------------- geometry
     @property
@@ -537,6 +592,11 @@ class ServingEngine(_EngineBase):
                 for i in range(self.pipeline_k):
                     self.states[i], applied, reason = self._migrate_state(
                         self.states[i], plan, permute_params=(i == 0))
+            if applied:
+                # weights/caches now sit in the plan's layout; the kernel
+                # gather maps must follow the same source of truth
+                self._phys_perms = plan["perms"]
+            self._refresh_head_rows(plan)
             self._log_interval(plan, applied, reason)
         return True
 

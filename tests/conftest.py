@@ -2,7 +2,6 @@
 tests and benches must see 1 CPU device (the 512-device override belongs
 exclusively to launch/dryrun.py)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config

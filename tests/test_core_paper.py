@@ -1,14 +1,13 @@
 """The paper's algorithm: Table-I cost model, scoring, Algorithm 1
 invariants, exact-solver gap, baseline ordering, simulator claims."""
 import numpy as np
-import pytest
 
 from repro.core import (ALL_POLICIES, DeviceNetwork, ResourceAwarePolicy,
                         exact_myopic, inference_delay, memory_feasible,
-                        memory_usage, migration_delay, score, simulate,
+                        memory_usage, migration_delay, simulate,
                         total_delay)
 from repro.core.algorithm import ResourceAwareAssigner
-from repro.core.blocks import CostModel, FFN, HEAD, PROJ, make_blocks
+from repro.core.blocks import CostModel, FFN, make_blocks
 from repro.core.solver import exact_horizon
 
 GB = 1024 ** 3

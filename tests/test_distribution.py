@@ -9,7 +9,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from jax.sharding import PartitionSpec as P

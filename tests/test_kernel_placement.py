@@ -1,0 +1,343 @@
+"""Placement-driven resident-slice decode kernel: interpret-mode parity
+against the jnp oracle over ragged per-layer placements, index-map
+plumbing (``placement_to_head_slices`` / ``head_row_maps``), and the
+serving engine's ``use_kernel=True`` stream equivalence before and after
+applied migrations.
+
+Hypothesis cases (ragged per-layer head splits, GQA group sizes,
+post-migration rebuilds) skip cleanly when hypothesis is absent; the
+deterministic parametrizations below keep the same surfaces covered."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.blocks import make_blocks, graph_of
+from repro.core.network import DeviceNetwork
+from repro.core.placement_bridge import (head_row_maps, identity_head_rows,
+                                         placement_to_head_slices,
+                                         placement_to_perms)
+from repro.kernels import ref
+from repro.kernels.decode_attention import (decode_attention_int8_resident,
+                                            decode_attention_resident)
+from tests.conftest import reduced_config
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _ragged_place(n_heads, n_layers, splits, n_slots):
+    """Block placement with layer l's heads split per ``splits[l]`` (a
+    tuple of per-slot counts summing to n_heads); proj/ffn on slot 0."""
+    blocks = make_blocks(n_heads, n_layers)
+    place = np.zeros(len(blocks), dtype=int)
+    g = graph_of(blocks)
+    for l, split in enumerate(splits):
+        assert sum(split) == n_heads and len(split) == n_slots
+        hid = 0
+        for s, cnt in enumerate(split):
+            for _ in range(cnt):
+                place[g.heads[l][hid].index] = s
+                hid += 1
+    return blocks, place
+
+
+# ------------------------------------------------------- per-slot dispatch
+@pytest.mark.parametrize("H,KvE,splits", [
+    (8, 8, [(1, 7), (5, 3)]),            # MHA, skewed + flipped
+    (8, 4, [(2, 6), (6, 2)]),            # GQA 2:1
+    (8, 2, [(4, 4), (8, 0)]),            # GQA 4:1, one empty slot
+])
+def test_per_slot_resident_dispatch_matches_oracle(H, KvE, splits):
+    """Each slot runs grid (B, H_res, nk) over only its resident rows —
+    the union over slots reproduces the full-oracle output exactly (no
+    padding to the global H, empty slots dispatch nothing)."""
+    B, T, dh, n_slots = 2, 128, 32, 2
+    n_layers = len(splits)
+    blocks, place = _ragged_place(H, n_layers, splits, n_slots)
+    slices = placement_to_head_slices(place, blocks, n_slots)
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, KvE, T, dh))
+    v = jax.random.normal(ks[2], (B, KvE, T, dh))
+    lens = jax.random.randint(ks[3], (B,), 1, T + 1)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    for l in range(n_layers):
+        got = np.zeros((B, H, dh), np.float32)
+        covered = []
+        for s in range(n_slots):
+            rows = slices[l][s]
+            assert len(rows) == splits[l][s]     # ragged grid, not padded
+            if not len(rows):
+                continue
+            out = decode_attention_resident(q, k, v, lens,
+                                            jnp.asarray(rows), bk=64,
+                                            interpret=True)
+            got[:, rows] = np.asarray(out)
+            covered.extend(rows.tolist())
+        assert sorted(covered) == list(range(H))
+        np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_int8_resident_kernel_in_sync():
+    """The fused int8-KV variant accepts the same gather maps and matches
+    the dequantized-cache oracle on a ragged slice."""
+    B, H, KvE, T, dh = 2, 4, 2, 128, 32
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, KvE, T, dh))
+    v = jax.random.normal(ks[2], (B, KvE, T, dh))
+
+    def q8(t):
+        sc = jnp.maximum(jnp.abs(t).max(-1), 1e-8) / 127.0
+        return (jnp.clip(jnp.round(t / sc[..., None]), -127, 127)
+                .astype(jnp.int8), sc)
+
+    kq, ksc = q8(k)
+    vq, vsc = q8(v)
+    lens = jax.random.randint(ks[3], (B,), 1, T + 1)
+    rows = jnp.asarray([3, 1, 0])                # ragged + out of order
+    out = decode_attention_int8_resident(q, kq, ksc, vq, vsc, lens, rows,
+                                         bk=64, interpret=True)
+    kd = kq.astype(jnp.float32) * ksc[..., None]
+    vd = vq.astype(jnp.float32) * vsc[..., None]
+    want = ref.decode_attention_ref(q, kd, vd, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want)[:, rows],
+                               atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------------- row-map logic
+def test_head_row_maps_cover_invert_and_follow_perms():
+    H, n_layers, n_slots = 8, 3, 4
+    blocks, place = _ragged_place(
+        H, n_layers, [(1, 3, 2, 2), (4, 0, 2, 2), (2, 2, 2, 2)], n_slots)
+    rows, inv = head_row_maps(place, blocks, n_slots, H)
+    assert rows.shape == inv.shape == (n_layers, H)
+    for l in range(n_layers):
+        assert sorted(rows[l].tolist()) == list(range(H))   # a permutation
+        np.testing.assert_array_equal(rows[l][inv[l]], np.arange(H))
+    # after a physical migration the maps must point at the NEW positions:
+    # logical head perms[l][p] sits at physical position p
+    perms = placement_to_perms(place, blocks, n_slots, H // n_slots)
+    prow, _ = head_row_maps(place, blocks, n_slots, H, perms=perms)
+    for l in range(n_layers):
+        inv_perm = np.argsort(perms[l])
+        np.testing.assert_array_equal(prow[l], inv_perm[rows[l]])
+
+
+def test_identity_head_rows_roundtrip():
+    rows, inv = identity_head_rows(2, 4)
+    np.testing.assert_array_equal(rows, inv)
+    np.testing.assert_array_equal(rows[0], np.arange(4))
+
+
+def test_placement_slices_are_the_cost_models_truth():
+    """The slices cover exactly the heads the cost model prices per layer
+    — same blocks, same placement array, one source of truth."""
+    H, n_layers, n_slots = 4, 2, 2
+    blocks, place = _ragged_place(H, n_layers, [(1, 3), (3, 1)], n_slots)
+    slices = placement_to_head_slices(place, blocks, n_slots)
+    g = graph_of(blocks)
+    for l in range(n_layers):
+        for s in range(n_slots):
+            for h in slices[l][s]:
+                blk = g.heads[l][h]
+                assert blk.head_id == h and int(place[blk.index]) == s
+
+
+# ------------------------------------------------------ hypothesis parity
+def test_resident_kernel_parity_hypothesis():
+    """Hypothesis-drawn ragged per-layer splits, GQA group sizes and a
+    post-migration index-map rebuild all stay allclose to the oracle."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(data=st.data(),
+           kv=st.sampled_from([1, 2, 4]),
+           n_layers=st.integers(1, 3),
+           seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=15, deadline=None)
+    def inner(data, kv, n_layers, seed):
+        H, n_slots, B, T, dh = 8, 2, 2, 64, 16
+        KvE = H // kv if kv > 1 else H
+        splits = []
+        for _ in range(n_layers):
+            a = data.draw(st.integers(0, H))
+            splits.append((a, H - a))
+        blocks, place = _ragged_place(H, n_layers, splits, n_slots)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(ks[0], (B, H, dh))
+        k = jax.random.normal(ks[1], (B, KvE, T, dh))
+        v = jax.random.normal(ks[2], (B, KvE, T, dh))
+        lens = jax.random.randint(ks[3], (B,), 1, T + 1)
+        want = np.asarray(ref.decode_attention_ref(q, k, v, lens))
+        group = H // KvE
+        perms = placement_to_perms(place, blocks, n_slots, H // n_slots,
+                                   group_size=group)
+        # physical migration: permute q rows by perms, kv rows by the
+        # induced group permutation (group-consistent layouts keep
+        # kv_row == q_row // G)
+        for use_perms in (None, perms):
+            rows, inv = head_row_maps(place, blocks, n_slots, H,
+                                      perms=use_perms)
+            for l in range(n_layers):
+                if use_perms is None:
+                    qp, kp, vp = q, k, v
+                else:
+                    qp = q[:, perms[l]]
+                    kvp = perms[l].reshape(-1, group)[:, 0] // group
+                    kp, vp = k[:, kvp], v[:, kvp]
+                out = decode_attention_resident(
+                    qp, kp, vp, lens, jnp.asarray(rows[l]), bk=32,
+                    interpret=True)
+                got = np.asarray(out)[:, inv[l]]        # back to phys order
+                if use_perms is not None:
+                    got = got[:, np.argsort(perms[l])]  # back to logical
+                np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+    inner()
+
+
+# ------------------------------------------------- engine stream parity
+def _run_engine(cfg, prompts, *, lam, straggle_at, use_kernel, n_dev=2):
+    from repro.serving.engine import ServingEngine
+    eng = ServingEngine(cfg, n_slots=2, max_seq=64, lam=lam, seed=0,
+                        net=DeviceNetwork.sample(n_dev, seed=1),
+                        use_kernel=use_kernel)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=10 + 3 * (i % 2))
+    while True:
+        if straggle_at is not None and eng.decode_steps == straggle_at:
+            dev = int(eng.controller.head_counts().argmax())
+            eng.net.inject_straggler(dev, slowdown=500.0)
+        if not eng.step():
+            break
+    return {r.rid: r.out_tokens for r in eng.finished}, eng
+
+
+def test_engine_streams_match_jnp_path_across_migration():
+    """Acceptance: ``ServingEngine(use_kernel=True)`` greedy streams equal
+    the jnp path on a multi-layer GQA model, with at least one migration
+    physically applied mid-serve (the kernel grid is rebuilt from the
+    controller's plan) and equal to a migration-free run."""
+    cfg = reduced_config("llama3-8b", n_layers=3, n_kv_heads=2)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, size=n) for n in (5, 11, 8, 14, 6)]
+    kern, eng = _run_engine(cfg, prompts, lam=3, straggle_at=4,
+                            use_kernel=True)
+    jnp_, _ = _run_engine(cfg, prompts, lam=3, straggle_at=4,
+                          use_kernel=False)
+    free, _ = _run_engine(cfg, prompts, lam=10 ** 9, straggle_at=None,
+                          use_kernel=True)
+    assert kern == jnp_ == free and len(kern) == 5
+    applied = [e for e in eng.migration_log
+               if e["applied"] and e["n_migrations"]]
+    assert applied, "no migration was physically applied"
+    # the maps were rebuilt from the plan: the physical layout moved and
+    # every per-layer row map is still a permutation of the head rows
+    assert eng._phys_perms is not None
+    Hp = eng.model.hd.Hp
+    assert any(not np.array_equal(p, np.arange(Hp))
+               for p in eng._phys_perms)
+    for l in range(cfg.n_layers):
+        assert sorted(eng._head_rows[l].tolist()) == list(range(Hp))
+
+
+def test_engine_decode_state_carries_row_maps():
+    cfg = reduced_config("musicgen-large", n_layers=3)
+    from repro.serving.engine import ServingEngine
+    eng = ServingEngine(cfg, n_slots=2, max_seq=48, lam=10 ** 9, seed=0,
+                        use_kernel=True)
+    st = eng.state
+    assert st["head_rows"].shape == (3, eng.model.hd.Hp)
+    assert st["head_inv"].shape == (3, eng.model.hd.Hp)
+    # and a kernel-less engine carries none (jnp path unchanged)
+    eng0 = ServingEngine(cfg, n_slots=2, max_seq=48, lam=10 ** 9, seed=0)
+    assert "head_rows" not in eng0.state
+
+
+def test_engine_use_kernel_geometry_guard():
+    """Placement-derived grids need the bridge's head-position space to
+    equal the model's padded head count — typed reject at construction."""
+    from repro.serving.engine import ServingEngine, UnsupportedArchError
+    cfg = reduced_config("llama3-8b")            # 4 heads
+    with pytest.raises(UnsupportedArchError, match="head-position"):
+        ServingEngine(cfg, n_slots=2, max_seq=32, seed=0, use_kernel=True,
+                      net=DeviceNetwork.sample(8, seed=0))  # 8 positions
+
+
+def test_cross_attention_kernel_parity_nonzero_gate():
+    """VLM cross-attention decode through the kernel: prefix-masked image
+    K/V, non-zero gate — allclose to the jnp path, including a fully
+    masked (text-only) row, which the jnp path resolves to the uniform
+    average of V rather than zero."""
+    from repro.models import layers as L
+    from repro.models.partitioning import NULL
+    cfg = reduced_config("llama-3.2-vision-11b")
+    hd = L.head_dims(cfg, 1)
+    p = L.init_attention(jax.random.PRNGKey(3), cfg, hd, cross=True)
+    p["gate"] = jnp.asarray(0.7)
+    B, I = 3, 8
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, 1, cfg.d_model))
+    kv = jax.random.normal(jax.random.PRNGKey(5), (B, I, cfg.d_model))
+    mask = np.zeros((B, I), bool)
+    mask[0, :5] = True                           # prefix-valid rows
+    mask[1, :I] = True                           # row 2 stays all-masked
+    out_j, cache = L.cross_attention_block(cfg, p, hd, x, NULL,
+                                           kv_embeds=kv,
+                                           kv_mask=jnp.asarray(mask))
+    out_k, _ = L.cross_attention_block(cfg, p, hd, x, NULL, kv_cache=cache,
+                                       kv_mask=jnp.asarray(mask),
+                                       use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_j),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_zamba2_use_kernel_decode_parity():
+    """The hybrid family forwards use_kernel to its shared attention
+    block (identity grid — one shared block, no per-layer row maps):
+    decode logits must match the jnp path instead of silently ignoring
+    the flag."""
+    from repro.models.api import build_model
+    cfg = reduced_config("zamba2-2.7b")
+    ref = build_model(cfg)
+    ker = build_model(cfg, use_kernel=True)
+    assert ker.use_kernel
+    params = ref.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                              cfg.vocab_size)
+    logits_r, st_r = ref.prefill(params, ref.init_decode_state(params, 2, 16),
+                                 toks)
+    logits_k, st_k = ker.prefill(params, ker.init_decode_state(params, 2, 16),
+                                 toks)
+    np.testing.assert_allclose(np.asarray(logits_k), np.asarray(logits_r),
+                               atol=1e-5, rtol=1e-5)
+    nxt = jnp.argmax(logits_r, axis=-1)
+    for _ in range(3):
+        logits_r, st_r = ref.decode_step(params, st_r, nxt)
+        logits_k, st_k = ker.decode_step(params, st_k, nxt)
+        np.testing.assert_allclose(np.asarray(logits_k),
+                                   np.asarray(logits_r),
+                                   atol=3e-5, rtol=3e-5)
+        nxt = jnp.argmax(logits_r, axis=-1)
+
+
+def test_cross_attention_kernel_rejects_non_prefix_mask():
+    """The kernel path models validity as per-row lengths, so a concrete
+    scattered (non-right-padded) kv_mask must be refused eagerly rather
+    than silently attending to the wrong slots."""
+    from repro.models import layers as L
+    from repro.models.partitioning import NULL
+    cfg = reduced_config("llama-3.2-vision-11b")
+    hd = L.head_dims(cfg, 1)
+    p = L.init_attention(jax.random.PRNGKey(3), cfg, hd, cross=True)
+    B, I = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, 1, cfg.d_model))
+    kv = jax.random.normal(jax.random.PRNGKey(5), (B, I, cfg.d_model))
+    _, cache = L.cross_attention_block(cfg, p, hd, x, NULL, kv_embeds=kv)
+    mask = np.zeros((B, I), bool)
+    mask[0, ::2] = True                          # scattered, not a prefix
+    mask[1, :I] = True
+    with pytest.raises(ValueError, match="prefix"):
+        L.cross_attention_block(cfg, p, hd, x, NULL, kv_cache=cache,
+                                kv_mask=jnp.asarray(mask), use_kernel=True)

@@ -216,7 +216,7 @@ def test_per_layer_head_perms_are_function_invariant_in_engine():
     logits bit-identical — even when every layer gets a DIFFERENT
     permutation, which the old single-permutation bridge could not
     express."""
-    jax = pytest.importorskip("jax")
+    pytest.importorskip("jax")
     import jax.numpy as jnp
     from tests.conftest import reduced_config
     from repro.core.placement_bridge import (apply_layer_head_perms,

@@ -7,10 +7,9 @@ import numpy as np
 import pytest
 
 from repro.core import (ALL_POLICIES, CostModel, DeviceNetwork,
-                        inference_delay, make_blocks, migration_delay,
-                        pipeline_bottleneck, pipelined_inference_delay,
-                        pipelined_total_delay, simulate, stage_partition,
-                        total_delay)
+                        inference_delay, make_blocks, pipeline_bottleneck,
+                        pipelined_inference_delay, pipelined_total_delay,
+                        simulate, stage_partition, total_delay)
 from repro.core.network import GBPS
 from repro.core.placement_bridge import (apply_layer_head_perms,
                                          kv_group_perms, placement_to_perms,
@@ -54,7 +53,7 @@ def test_dpipe_bounded_by_dt_hypothesis():
     """On random multi-layer graphs and placements, K in flight never
     exceeds the sequential per-token delay, and D_pipe is non-increasing
     in K (more overlap cannot slow the stream)."""
-    hypothesis = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=60, deadline=None)
@@ -164,7 +163,7 @@ def test_gqa_group_migration_logits_invariant():
     """Acceptance: a GQA config physically migrates KV groups — per-layer
     group-consistent permutations applied to weights AND grouped cache
     leave the next decode step's logits invariant."""
-    jax = pytest.importorskip("jax")
+    pytest.importorskip("jax")
     import jax.numpy as jnp
     from tests.conftest import reduced_config
     from repro.core.placement_bridge import permute_model_heads_layers

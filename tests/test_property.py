@@ -10,8 +10,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import DeviceNetwork, inference_delay, memory_usage, \
-    migration_delay, total_delay
+from repro.core import (DeviceNetwork, inference_delay, memory_usage,
+                        migration_delay)
 from repro.core.algorithm import ResourceAwareAssigner
 from repro.core.blocks import CostModel, make_blocks
 from repro.core.placement_bridge import migration_pairs, placement_to_perm

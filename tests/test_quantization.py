@@ -1,7 +1,6 @@
 """int8 weight-only + int8 KV-cache serving (beyond-paper §Perf levers)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.models.api import build_model

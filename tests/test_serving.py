@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.models.api import build_model
 from repro.serving.engine import (ServingEngine, WaveServingEngine,
                                   default_buckets, make_engine)
 from tests.conftest import reduced_config

@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs import SHAPES, get_config
 from repro.core.blocks import make_blocks
 from repro.core.placement_bridge import (migration_pairs, permute_model_heads,
                                          placement_to_perm)
