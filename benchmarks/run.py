@@ -16,10 +16,12 @@ when its latency (``us_per_call``, lower is better) regresses by more
 than ``--check-tol`` (default 15%), or a throughput-like derived metric
 (``tok_s`` / ``x_*`` / ``speedup``, higher is better) or a quality ratio
 (``ratio_to_exact``, lower is better) regresses by the same margin;
-improvements always pass.  Baseline rows missing from the fresh run fail
-too (coverage loss), new rows are informational.  Refresh the committed
-baselines with ``--json benchmarks/baselines --only <groups>`` on the CI
-reference machine.
+improvements always pass.  The row SETS must match exactly, both ways:
+baseline rows missing from the fresh run fail (coverage loss), and fresh
+rows absent from the baseline fail too — an unmatched new row would
+otherwise run ungated forever, silently passing whatever it measures.
+Refresh the committed baselines with ``--json benchmarks/baselines
+--only <groups>`` on the CI reference machine.
 """
 import argparse
 import json
@@ -34,6 +36,7 @@ MODULES = [
     ("scalability", "benchmarks.scalability"),          # §V.D(c) (+ layers)
     ("serving_throughput", "benchmarks.serving_throughput"),  # engine tok/s
     ("pipelined", "benchmarks.pipelined_decode"),       # K-in-flight tok/s
+    ("pipeline_search", "benchmarks.pipeline_search"),  # bottleneck search
     ("kernels", "benchmarks.kernel_bench"),             # per-kernel
     ("kernel_decode", "benchmarks.kernel_decode"),      # resident vs padded
     ("roofline", "benchmarks.roofline"),                # deliverable (g)
@@ -104,6 +107,16 @@ def check_group(key: str, fresh_rows: list, baseline_dir: str,
         baseline = json.load(f)
     fresh = {r["name"]: r for r in fresh_rows}
     fails = []
+    # fail-closed on NEW row names: a fresh row with no baseline row has
+    # no gate at all — it used to pass silently (a renamed row even read
+    # as "missing baseline" on one side and nothing on the other), so any
+    # unmatched rows fail until the baseline is refreshed to cover them
+    known = {r["name"] for r in baseline}
+    unmatched = [n for n in fresh if n not in known]
+    if unmatched:
+        fails.append(f"{key}: {len(unmatched)} row(s) not in the baseline "
+                     f"(ungated): {', '.join(sorted(unmatched))} — refresh "
+                     f"with --json {baseline_dir} --only {key}")
     for brow in baseline:
         name = brow["name"]
         frow = fresh.get(name)

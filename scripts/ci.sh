@@ -41,5 +41,6 @@ fi
 #    ratio_to_exact metrics stay at the strict 15%); override by
 #    exporting BENCH_CHECK_TOL_WALL.
 export BENCH_CHECK_TOL_WALL="${BENCH_CHECK_TOL_WALL:-0.60}"
-python -m benchmarks.run --only small_scale,pipelined,kernel_decode \
+python -m benchmarks.run \
+    --only small_scale,pipelined,kernel_decode,pipeline_search \
     --check benchmarks/baselines

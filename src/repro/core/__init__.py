@@ -1,8 +1,14 @@
 """The paper's contribution: attention-head-level partitioning + myopic
 resource-aware migration for low-latency edge LLM inference."""
-from repro.core.algorithm import AlgoStats, ResourceAwareAssigner  # noqa: F401
+from repro.core.algorithm import (  # noqa: F401
+    AlgoStats,
+    ResourceAwareAssigner,
+    refine_bottleneck,
+    stage_balanced_chain,
+)
 from repro.core.baselines import (  # noqa: F401
     ALL_POLICIES,
+    BottleneckAwarePolicy,
     ColumnCoPartitionPolicy,
     DynamicLayerPolicy,
     EdgeShardPolicy,
@@ -27,6 +33,7 @@ from repro.core.blocks import (  # noqa: F401
     stage_partition,
 )
 from repro.core.delay import (  # noqa: F401
+    bottleneck_attribution,
     inference_delay,
     memory_feasible,
     memory_usage,

@@ -27,7 +27,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.blocks import Block, CostModel
+from repro.core.blocks import Block, CostModel, graph_of
 from repro.core.delay import total_delay
 from repro.core.network import DeviceNetwork
 from repro.core.scoring import score
@@ -303,3 +303,215 @@ class ResourceAwareAssigner:
                 comp_used[dest] += comp[k]
                 progressed = True
         return progressed
+
+
+# ---------------------------------------------------------------------------
+# Bottleneck-targeted pipeline placement search (beyond Algorithm 1)
+# ---------------------------------------------------------------------------
+#
+# Algorithm 1 minimizes the myopic single-token objective D_T + D_mig; on
+# multi-device edge topologies the pipelined steady state is bounded by the
+# busiest single RESOURCE instead (delay.resource_busy_times).  The two
+# functions below are the search primitives ResourceAwarePolicy's
+# ``search="bottleneck"`` mode composes:
+#
+#  - ``stage_balanced_chain``: an EdgeShard-style layer→device chain seed
+#    whose contiguous layer runs are weighted by per-device compute AND the
+#    inter-stage link bytes — the layer-disjoint stage structure Algorithm
+#    1's per-block argmin never proposes.
+#  - ``refine_bottleneck``: local search that relieves the argmax resource
+#    with layer-chain moves (a whole layer relocated as one move,
+#    preferentially along fast links) interleaved with the per-block
+#    best-improvement sweep, accepting a move only when it strictly lowers
+#    D_pipe(k) and its migration bytes amortize over ``amortize`` intervals
+#    (the myopic one-interval payback is exactly why rescue migrations
+#    never applied under fluctuating load).  Exact D_pipe ties break on
+#    D_T + D_mig, the paper objective.
+
+
+def _pipe_value(prev, place, blocks, cost, net, tau, k: int):
+    """(D_pipe(k), D_T + D_mig, D_mig) — the lexicographic search key plus
+    the migration component the amortization gate prices separately."""
+    from repro.core.delay import (inference_delay, migration_delay,
+                                  pipeline_bottleneck)
+    d_t = inference_delay(place, blocks, cost, net, tau)
+    b = min(pipeline_bottleneck(place, blocks, cost, net, tau), d_t)
+    d_pipe = (d_t + (k - 1) * b) / k
+    d_mig = migration_delay(prev, place, blocks, cost, net, tau)
+    return float(d_pipe), float(d_t + d_mig), float(d_mig)
+
+
+def stage_balanced_chain(blocks: Sequence[Block], cost: CostModel,
+                         net: DeviceNetwork, tau: int, *,
+                         pipeline_k: int = 2,
+                         rebalance_passes: int = 16) -> Optional[np.ndarray]:
+    """Stage-balanced layer→device chain: every block of a contiguous
+    layer run on one device, runs sized so no stage's (compute + incoming
+    inter-stage transfer) time sticks out.
+
+    Device order is a greedy fast-link path (from every start, keep the
+    unvisited device with the fastest link from the current chain end);
+    layer shares start proportional to compute_avail and a boundary-layer
+    rebalance then walks single layers off the max-time stage.  Candidate
+    chains are scored by (D_pipe(pipeline_k), D_T); only memory-feasible
+    chains are returned, ``None`` when no start yields one (tiny-memory
+    devices)."""
+    from repro.core.delay import memory_feasible
+    g = graph_of(blocks)
+    L, V = g.n_layers, net.n_devices
+    layer_comp = float(sum(cost.compute(b, tau) for b in g.layer_blocks(0)))
+    boundary = cost.interlayer_bytes(tau)
+
+    def chain_placement(devs: List[int], shares: np.ndarray) -> np.ndarray:
+        place = np.empty(len(blocks), dtype=int)
+        nxt = 0
+        for dev, n in zip(devs, shares):
+            for _ in range(int(n)):
+                for b in g.layer_blocks(nxt):
+                    place[b.index] = dev
+                nxt += 1
+        return place
+
+    def stage_time(devs, shares, s: int) -> float:
+        t = shares[s] * layer_comp / net.compute_avail[devs[s]]
+        # incoming edge comes from the nearest PRECEDING stage that still
+        # holds layers (a rebalanced-to-zero stage is not on the chain)
+        src = net.controller
+        for p in range(s - 1, -1, -1):
+            if shares[p] > 0:
+                src = devs[p]
+                break
+        if src != devs[s]:
+            t += boundary / net.bandwidth[src, devs[s]]
+        return t
+
+    best: Optional[tuple] = None
+    for start in range(V):
+        order, left = [start], set(range(V)) - {start}
+        while left:
+            nxt = max(left, key=lambda j: net.bandwidth[order[-1], j])
+            order.append(nxt)
+            left.remove(nxt)
+        speeds = net.compute_avail[order]
+        shares = np.maximum(0, np.round(L * speeds / speeds.sum())).astype(int)
+        while shares.sum() > L:
+            shares[int(np.argmax(shares))] -= 1
+        while shares.sum() < L:
+            shares[int(np.argmax(speeds * (shares > 0)))] += 1
+        # walk boundary layers off the worst stage onto a chain neighbor
+        for _ in range(rebalance_passes):
+            used = [s for s in range(V) if shares[s] > 0]
+            times = {s: stage_time(order, shares, s) for s in used}
+            worst = max(used, key=lambda s: times[s])
+            moved = False
+            for nb in (worst - 1, worst + 1):
+                if not (0 <= nb < V):
+                    continue
+                trial = shares.copy()
+                trial[worst] -= 1
+                trial[nb] += 1
+                t_used = [s for s in range(V) if trial[s] > 0]
+                t_worst = max(stage_time(order, trial, s) for s in t_used)
+                if t_worst < times[worst] - 1e-15:
+                    shares, moved = trial, True
+                    break
+            if not moved:
+                break
+        chain = [(d, int(n)) for d, n in zip(order, shares) if n > 0]
+        place = chain_placement([d for d, _ in chain],
+                                np.array([n for _, n in chain]))
+        if not memory_feasible(place, blocks, cost, net, tau):
+            continue
+        key = _pipe_value(None, place, blocks, cost, net, tau, pipeline_k)[:2]
+        if best is None or key < best[0]:
+            best = (key, place)
+    return None if best is None else best[1]
+
+
+def refine_bottleneck(prev: Optional[np.ndarray], place: np.ndarray,
+                      blocks: Sequence[Block], cost: CostModel,
+                      net: DeviceNetwork, tau: int, *, k: int,
+                      amortize: int = 16, rounds: int = 4) -> np.ndarray:
+    """Bottleneck-targeted local search: shrink D_pipe(k) by relieving the
+    argmax resource of ``resource_busy_times``.
+
+    Each round reads ``bottleneck_attribution``, then tries (a) layer-chain
+    moves — every layer with a block on the bottleneck resource relocated
+    whole to each feasible device — interleaved with (b) the per-block
+    best-improvement sweep scoped to blocks resident on (or transferring
+    over) that resource.  A move is accepted only when it strictly lowers
+    D_pipe(k) AND the migration delay it adds pays back within ``amortize``
+    intervals (``amortize · gain > added D_mig``) — the amortized version
+    of §III.G's filter, without which a straggler's rescue migration never
+    pays at λ=1 and the placement stays wedged.  Among equal-D_pipe moves
+    the lower D_T + D_mig wins (the paper objective as tie-break).
+
+    Monotone: the returned placement's D_pipe(k) is never worse than
+    ``place``'s, so callers keep the rescoring policy's guarantees."""
+    from repro.core.delay import bottleneck_attribution, memory_usage
+    g = graph_of(blocks)
+    V = net.n_devices
+    mem = cost.memory_vector(blocks, tau)
+    cur = np.asarray(place, dtype=int).copy()
+    cur_pipe, cur_tie, cur_mig = _pipe_value(prev, cur, blocks, cost, net,
+                                             tau, k)
+    use = memory_usage(cur, blocks, cost, net, tau)
+
+    def try_move(idxs: List[int], j: int, best: Optional[tuple]):
+        """Evaluate relocating blocks ``idxs`` to device ``j``; returns the
+        updated best candidate (pipe, tie, mig, j)."""
+        old = cur[idxs].copy()
+        need = sum(mem[i] for i in idxs if cur[i] != j)
+        if use[j] + need > net.mem_capacity[j]:
+            return best
+        cur[idxs] = j
+        pipe, tie, mig = _pipe_value(prev, cur, blocks, cost, net, tau, k)
+        cur[idxs] = old
+        if pipe >= cur_pipe - 1e-15:
+            return best
+        if amortize * (cur_pipe - pipe) <= (mig - cur_mig):
+            return best          # migration bytes never pay back
+        if best is None or (pipe, tie) < (best[0], best[1]):
+            return (pipe, tie, mig, j)
+        return best
+
+    def commit(idxs: List[int], best: tuple):
+        nonlocal cur_pipe, cur_tie, cur_mig
+        for i in idxs:
+            use[cur[i]] -= mem[i]
+            use[best[3]] += mem[i]
+        cur[idxs] = best[3]
+        cur_pipe, cur_tie, cur_mig = best[:3]
+
+    for _ in range(max(0, rounds)):
+        improved = False
+        kind, ident, _ = bottleneck_attribution(cur, blocks, cost, net, tau)
+        hot_devs = {ident} if kind == "device" else set(ident)
+        # (a) layer-chain moves: layers touching the bottleneck resource
+        for l in range(g.n_layers):
+            idxs = [b.index for b in g.layer_blocks(l)]
+            if not any(int(cur[i]) in hot_devs for i in idxs):
+                continue
+            best = None
+            for j in range(V):
+                best = try_move(idxs, j, best)
+            if best is not None:
+                commit(idxs, best)
+                improved = True
+        # (b) per-block best-improvement sweep over the (possibly new)
+        # bottleneck resource's resident blocks
+        kind, ident, _ = bottleneck_attribution(cur, blocks, cost, net, tau)
+        hot_devs = {ident} if kind == "device" else set(ident)
+        for i in range(len(blocks)):
+            if int(cur[i]) not in hot_devs:
+                continue
+            best = None
+            for j in range(V):
+                if j != int(cur[i]):
+                    best = try_move([i], j, best)
+            if best is not None:
+                commit([i], best)
+                improved = True
+        if not improved:
+            break
+    return cur

@@ -48,6 +48,13 @@ class ControllerConfig:
     # scales its interval cadence by K (λ stays token-denominated while a
     # scheduler step advances only 1/K of the slots).
     pipeline_k: int = 1
+    # placement search mode: "rescoring" is the PR-3 path (Algorithm 1,
+    # refine, filter); "bottleneck" (with pipeline_k > 1) adds the
+    # bottleneck-targeted search — stage-balanced chain seed + layer-chain
+    # moves aimed at the argmax resource, migrations amortized over
+    # ``amortize`` intervals (baselines.ResourceAwarePolicy docstring).
+    search: str = "rescoring"
+    amortize: int = 16
 
 
 class IntervalController:
@@ -64,6 +71,25 @@ class IntervalController:
         # per-token deadline (conflating them made every ffn infeasible)
         self.assigner = ResourceAwareAssigner(self.blocks, cost,
                                               deadline=cfg.deadline * cfg.lam)
+        # bottleneck-targeted search mode: plans come from the full policy
+        # (assign → refine → filter → bottleneck search) so the engine's
+        # real migrations follow the steady-state objective; the default
+        # "rescoring" path below stays bit-for-bit the PR-3 controller,
+        # as does "bottleneck" at pipeline_k=1 (the search only exists on
+        # the pipelined objective).  Unknown modes fail HERE, at
+        # construction — a typo must not silently serve the rescoring
+        # planner the caller opted out of.
+        from repro.core.baselines import ResourceAwarePolicy
+        if cfg.search not in ResourceAwarePolicy.SEARCH_MODES:
+            raise ValueError(
+                f"ControllerConfig.search must be one of "
+                f"{ResourceAwarePolicy.SEARCH_MODES}, got {cfg.search!r}")
+        self._policy = None
+        if cfg.search == "bottleneck" and cfg.pipeline_k > 1:
+            self._policy = ResourceAwarePolicy(
+                self.blocks, cost, deadline=cfg.deadline * cfg.lam,
+                pipeline_k=cfg.pipeline_k, search="bottleneck",
+                amortize=cfg.amortize, min_gain=cfg.min_gain)
         self.place: Optional[np.ndarray] = None
         self.perms: Optional[np.ndarray] = None   # (n_layers, slots·hps)
         self.tau = 0
@@ -99,18 +125,29 @@ class IntervalController:
         of the lock-step +1-per-interval counter the simulator uses."""
         self.tau = max(1, int(tau)) if tau is not None else self.tau + 1
         prev = self.place
-        place, stats = self.assigner.assign(self.net, self.tau, prev)
-        if place is None:
-            place = prev if prev is not None else \
-                np.zeros(len(self.blocks), dtype=int)
-        # objective filter: keep migrations only if they pay (paper §III.G).
-        # With pipeline_k > 1 the objective is D_pipe(K) + D_mig — a move
-        # that lengthens the critical path but relieves the bottleneck
-        # resource can now win (k=1 is total_delay bit-for-bit).
         k = self.cfg.pipeline_k
-        place = revert_unpaying_migrations(prev, place, self.blocks,
-                                           self.cost, self.net, self.tau,
-                                           k=k, min_gain=self.cfg.min_gain)
+        if self._policy is not None:
+            # bottleneck mode: the policy already refines, filters (with
+            # min_gain) and runs the bottleneck-targeted search
+            place = self._policy.place(self.net, self.tau, prev)
+            stats = self._policy.last_stats
+            if place is None:
+                place = prev if prev is not None else \
+                    np.zeros(len(self.blocks), dtype=int)
+        else:
+            place, stats = self.assigner.assign(self.net, self.tau, prev)
+            if place is None:
+                place = prev if prev is not None else \
+                    np.zeros(len(self.blocks), dtype=int)
+            # objective filter: keep migrations only if they pay (§III.G).
+            # With pipeline_k > 1 the objective is D_pipe(K) + D_mig — a
+            # move that lengthens the critical path but relieves the
+            # bottleneck resource can now win (k=1 is total_delay
+            # bit-for-bit).
+            place = revert_unpaying_migrations(prev, place, self.blocks,
+                                               self.cost, self.net, self.tau,
+                                               k=k,
+                                               min_gain=self.cfg.min_gain)
         n_slots = self.net.n_devices
         new_perms = placement_to_perms(place, self.blocks, n_slots,
                                        self.cfg.heads_per_slot,

@@ -186,6 +186,28 @@ def pipeline_bottleneck(place: np.ndarray, blocks: Sequence[Block],
     return worst
 
 
+def bottleneck_attribution(place: np.ndarray, blocks: Sequence[Block],
+                           cost: CostModel, net: DeviceNetwork, tau: int,
+                           *, strict_eq6: bool = False) -> tuple:
+    """WHICH resource is the pipeline bottleneck: the argmax of
+    ``resource_busy_times``, i.e. the single device or directed link whose
+    per-token busy time bounds the steady-state pipelined rate.
+
+    Returns ``("device", j, seconds)`` or ``("link", (j, k), seconds)``
+    with ``seconds == pipeline_bottleneck(...)``.  A bottleneck-targeted
+    search relieves exactly this resource first — moving blocks that
+    neither compute on it nor transfer over it cannot shrink B."""
+    dev_busy, link_busy = resource_busy_times(place, blocks, cost, net, tau,
+                                              strict_eq6=strict_eq6)
+    kind: str = "device"
+    ident: object = int(np.argmax(dev_busy)) if dev_busy.size else 0
+    busy = float(dev_busy.max()) if dev_busy.size else 0.0
+    for lk, seconds in link_busy.items():
+        if seconds > busy:
+            kind, ident, busy = "link", lk, float(seconds)
+    return kind, ident, busy
+
+
 def pipelined_inference_delay(place: np.ndarray, blocks: Sequence[Block],
                               cost: CostModel, net: DeviceNetwork, tau: int,
                               *, k: int = 1,

@@ -173,6 +173,22 @@ def kv_group_perms(perms: np.ndarray, group_size: int) -> np.ndarray:
     return out
 
 
+def expand_kv_perms(kv_perms: np.ndarray, rep: int) -> np.ndarray:
+    """Expanded-KV (replicated) row permutation induced by a KV-head
+    permutation: caches of ``rep``-replicated archs (``HeadDims.rep`` > 1,
+    tp > n_kv_heads) store ``KvE = Kp·rep`` rows where expanded row
+    ``o·rep + r`` is replica r of KV head o.  Replicas are exact copies,
+    so a KV-head permutation lifts to the expanded layout by moving each
+    head's whole replica block: new expanded row ``o·rep + r`` holds old
+    expanded row ``kv_perms[.., o]·rep + r``.  Shape (L, Kp) -> (L, KvE);
+    ``rep=1`` is the identity lift."""
+    kv = np.atleast_2d(np.asarray(kv_perms))
+    if rep <= 1:
+        return kv
+    out = kv[:, :, None] * rep + np.arange(rep)
+    return out.reshape(kv.shape[0], -1)
+
+
 def placement_to_head_slices(place: np.ndarray, blocks: Sequence[Block],
                              n_slots: int, layer: Optional[int] = None):
     """Per-(layer, slot) resident head rows of a BlockGraph placement — the
@@ -304,22 +320,25 @@ def relative_perms(prev_perms: np.ndarray, new_perms: np.ndarray
 
 
 def apply_head_perm(cache_k, cache_v, perm, head_axis: int = 3,
-                    group_size: int = 1):
+                    group_size: int = 1, rep: int = 1):
     """Reorders the expanded-KV head axis of a stacked cache
     ((L, B, T, KvE, dh) by default).  Under a head-sharded mesh this gather
     lowers to collective-permute / all-to-all between slots — the physical
     migration.  ``group_size`` > 1: ``perm`` is a (group-consistent)
     query-head permutation and the cache head axis holds one KV head per
-    group — the induced KV permutation is applied instead."""
+    group — the induced KV permutation is applied instead.  ``rep`` > 1
+    (replicated-KV archs): the induced Kp-row permutation is lifted to the
+    KvE replicated rows via ``expand_kv_perms``."""
     if group_size > 1:
-        perm = kv_group_perms(perm, group_size)[0]
+        perm = expand_kv_perms(kv_group_perms(perm, group_size), rep)[0]
     idx = jnp.asarray(perm)
     return (jnp.take(cache_k, idx, axis=head_axis),
             jnp.take(cache_v, idx, axis=head_axis))
 
 
 def apply_layer_head_perms(cache_k, cache_v, perms, *, layer_axis: int = 0,
-                           head_axis: int = 3, group_size: int = 1):
+                           head_axis: int = 3, group_size: int = 1,
+                           rep: int = 1):
     """Per-layer reorder of a stacked cache ((L, B, T, KvE, dh) by default):
     row l of ``perms`` permutes layer l's head axis.  Under a head-sharded
     mesh each row lowers to collective-permute / all-to-all between slots —
@@ -327,9 +346,12 @@ def apply_layer_head_perms(cache_k, cache_v, perms, *, layer_axis: int = 0,
     (group-consistent) query-head permutations while the cache head axis is
     KV heads (one per group) — rows are mapped through ``kv_group_perms``
     so grouped caches physically move with their query heads instead of
-    being silently skipped."""
+    being silently skipped.  ``rep`` > 1 additionally lifts the induced
+    Kp-row permutations onto the KvE replicated cache rows
+    (``expand_kv_perms``) — the replica-aware migration that makes
+    ``HeadDims.rep > 1`` engines migratable."""
     if group_size > 1:
-        perms = kv_group_perms(perms, group_size)
+        perms = expand_kv_perms(kv_group_perms(perms, group_size), rep)
     idx = jnp.asarray(perms)
 
     def take(c):

@@ -23,7 +23,8 @@ import numpy as np
 from repro.core.baselines import Policy
 from repro.core.blocks import Block, CostModel
 from repro.core.delay import (inference_delay, memory_usage,
-                              migration_delay, pipelined_inference_delay)
+                              migration_delay, pipeline_bottleneck,
+                              pipelined_inference_delay)
 from repro.core.network import DeviceNetwork
 
 
@@ -38,6 +39,10 @@ class StepRecord:
     mem_max_device: float
     n_migrations: int
     infeasible: bool
+    # busiest-resource busy time (pipelined runs only, else 0): the
+    # steady-state interval the bottleneck-targeted search minimizes —
+    # lets benchmarks attribute a policy's throughput to B vs D_T.
+    d_bneck: float = 0.0
 
 
 @dataclasses.dataclass
@@ -64,6 +69,11 @@ class SimResult:
     @property
     def migrations(self) -> int:
         return sum(s.n_migrations for s in self.steps)
+
+    @property
+    def bottleneck_series(self) -> np.ndarray:
+        """Per-step busiest-resource busy time (pipelined runs)."""
+        return np.array([s.d_bneck for s in self.steps])
 
 
 def overload_stall(place: np.ndarray, blocks: Sequence[Block],
@@ -94,6 +104,7 @@ def simulate(policy: Policy, blocks: Sequence[Block], cost: CostModel,
             net.step_background_load()
         place = policy.place(net, tau, prev)
         infeasible = place is None
+        d_bneck = 0.0
         if infeasible:
             place = prev if prev is not None else \
                 np.zeros(len(blocks), dtype=int)
@@ -116,6 +127,8 @@ def simulate(policy: Policy, blocks: Sequence[Block], cost: CostModel,
                 d_inf = pipelined_inference_delay(place, blocks, cost, net,
                                                   tau, k=pipeline_k,
                                                   strict_eq6=strict_eq6)
+                d_bneck = pipeline_bottleneck(place, blocks, cost, net, tau,
+                                              strict_eq6=strict_eq6)
             else:
                 d_inf = inference_delay(place, blocks, cost, net, tau,
                                         strict_eq6=strict_eq6)
@@ -127,7 +140,7 @@ def simulate(policy: Policy, blocks: Sequence[Block], cost: CostModel,
             tau=tau, d_inf=d_inf, d_mig=d_mig, d_overload=d_ovl,
             cumulative=cumulative, mem_total=float(use.sum()),
             mem_max_device=float(use.max()), n_migrations=n_mig,
-            infeasible=infeasible))
+            infeasible=infeasible, d_bneck=d_bneck))
         prev = place
     return SimResult(policy=policy.name, steps=records)
 

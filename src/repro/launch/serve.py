@@ -39,14 +39,28 @@ def main(argv=None):
                     help="decode through the placement-driven Pallas "
                          "flash-decode kernel (auto-interpret on CPU); "
                          "greedy streams must match the jnp path")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (continuous engine splices "
+                         "quantized values + scales per slot)")
+    ap.add_argument("--pipeline-k", type=int, default=1,
+                    help="decode tokens in flight across slot groups "
+                         "(must divide --slots)")
+    ap.add_argument("--search", default="rescoring",
+                    choices=("rescoring", "bottleneck"),
+                    help="controller placement search: the PR-3 rescoring "
+                         "path or the bottleneck-targeted search "
+                         "(pipeline-k > 1)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_for_cpu(cfg)
+    if args.kv_quant:
+        cfg = cfg.with_overrides(kv_quant=True)
     eng = make_engine(cfg, mode=args.engine, n_slots=args.slots,
                       max_seq=args.prompt_len + args.tokens + 8,
-                      lam=args.lam, use_kernel=args.use_kernel)
+                      lam=args.lam, use_kernel=args.use_kernel,
+                      pipeline_k=args.pipeline_k, search=args.search)
     print(f"[serve] engine: {type(eng).__name__}")
     if args.straggler >= 0:
         eng.net.inject_straggler(args.straggler, slowdown=20.0)

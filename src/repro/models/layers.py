@@ -434,10 +434,27 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
                 return qq, sc.astype(jnp.float32)
             kq, ksc = q8(k)
             vq, vsc = q8(v)
-            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, cache_pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, cache_pos, 0, 0))
-            cks = jax.lax.dynamic_update_slice(cache["k_sc"], ksc, (0, cache_pos, 0))
-            cvs = jax.lax.dynamic_update_slice(cache["v_sc"], vsc, (0, cache_pos, 0))
+            if getattr(cache_pos, "ndim", 0) == 1:
+                # per-slot write (continuous batching, S == 1): row b's
+                # quantized K/V and scales land at its own position, same
+                # drop-at-the-edge rule as the fp per-slot branch below
+                rows_b = jnp.arange(B)
+                cp = jnp.asarray(cache_pos, jnp.int32)
+                ck = cache["k"].at[rows_b, cp].set(kq[:, 0], mode="drop")
+                cv = cache["v"].at[rows_b, cp].set(vq[:, 0], mode="drop")
+                cks = cache["k_sc"].at[rows_b, cp].set(ksc[:, 0],
+                                                       mode="drop")
+                cvs = cache["v_sc"].at[rows_b, cp].set(vsc[:, 0],
+                                                       mode="drop")
+            else:
+                ck = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, cache_pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, cache_pos, 0, 0))
+                cks = jax.lax.dynamic_update_slice(cache["k_sc"], ksc,
+                                                   (0, cache_pos, 0))
+                cvs = jax.lax.dynamic_update_slice(cache["v_sc"], vsc,
+                                                   (0, cache_pos, 0))
             ck = part.constrain(ck, ("batch", "cache_seq", "kv_heads", None))
             cv = part.constrain(cv, ("batch", "cache_seq", "kv_heads", None))
             new_cache = dict(cache, k=ck, v=cv, k_sc=cks, v_sc=cvs)

@@ -405,6 +405,13 @@ class TransformerLM:
         upd = {name: splice_kv(cache[name], sub_cache[name],
                                cache[name].ndim - 4)
                for name in ("k", "v")}
+        # int8 KV caches carry per-(token, head) scales whose batch axis
+        # sits one dim closer to the front ((L, B, T, KvE) -> ndim - 3);
+        # splicing values without their scales would dequantize garbage
+        for name in ("k_sc", "v_sc"):
+            if name in cache:
+                upd[name] = splice_kv(cache[name], sub_cache[name],
+                                      cache[name].ndim - 3)
         pos = jax.lax.dynamic_update_slice(
             state["pos"], jnp.asarray(sub["pos"], jnp.int32), (slot,))
         out = dict(state, cache=dict(cache, **upd), pos=pos)

@@ -85,13 +85,14 @@ def supports_continuous(cfg: ModelConfig) -> Optional[str]:
     """None when ``cfg`` can run the slot-level scheduler, else the reason
     it can't (cfg-only, so ``make_engine`` decides before building params).
     VLM states are slot-wired (img_kv/img_mask splice in
-    ``TransformerLM.insert_slot``), so vlm no longer falls back."""
+    ``TransformerLM.insert_slot``), and int8 KV caches (``kv_quant``) are
+    continuous too — ``insert_slot`` splices the quantized values AND
+    their per-(token, head) scales, and decode scatters per-slot writes
+    into the int8 buffers — so neither falls back any more."""
     if cfg.family in ("ssm", "hybrid"):
         return f"{cfg.family} archs have no prefill_bucketed/insert_slot API"
     if cfg.sliding_window:
         return "continuous batching needs a linear KV cache, not a ring"
-    if getattr(cfg, "kv_quant", False):
-        return "continuous batching over int8 KV caches is not wired up yet"
     return None
 
 
@@ -116,12 +117,16 @@ class _EngineBase:
                  net: Optional[DeviceNetwork] = None, cost_cfg=None,
                  part=None, tp: int = 1, greedy: bool = True,
                  layer_mode: str = "graph", pipeline_k: int = 1,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, search: str = "rescoring"):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.greedy = greedy
         self.pipeline_k = max(1, int(pipeline_k))
+        # search="bottleneck" (with pipeline_k > 1): controller plans come
+        # from the bottleneck-targeted placement search, so the real cache/
+        # weight migrations below follow the steady-state objective.
+        self.search = search
         # use_kernel: decode attention runs the Pallas flash-decode kernel
         # (auto-interpreted on CPU) with its grid derived from the
         # controller's placement — see _refresh_head_rows.
@@ -156,10 +161,15 @@ class _EngineBase:
         # KV-group size: GQA stacks migrate whole groups (query heads move
         # with their shared KV head), so the controller emits
         # group-consistent permutations — the old silent skip is gone.
+        # With replicated KV (hd.rep > 1: tp > n_kv_heads) the unit is the
+        # SUPERGROUP Hp // Kp — all query heads of one un-replicated KV
+        # head move together, so the Kp-row kv weights stay permutable and
+        # the KvE replicated cache rows follow via ``expand_kv_perms``.
+        # For rep == 1 this is exactly hd.groups (Hp // KvE), unchanged.
         # Geometry must divide at CONSTRUCTION (never mid-serve): the
         # bridge's head-position space is n_devices·heads_per_slot wide and
         # group blocks must tile it exactly.
-        group = hd.groups if hd and hd.Hp and hd.KvE else 1
+        group = (hd.Hp // hd.Kp) if hd and hd.Hp and hd.Kp else 1
         if group > 1 and ((self.net.n_devices * heads_per_slot) % group
                           or max(cfg.n_heads, 1) % group):
             raise UnsupportedArchError(
@@ -171,7 +181,8 @@ class _EngineBase:
             max(cfg.n_heads, 1), self.cost, self.net,
             ControllerConfig(lam=lam, heads_per_slot=heads_per_slot,
                              group_size=group,
-                             pipeline_k=self.pipeline_k))
+                             pipeline_k=self.pipeline_k,
+                             search=self.search))
         self.monitor = HeartbeatMonitor(self.net.n_devices)
         self.lam = lam
         self.decode_steps = 0
@@ -245,16 +256,24 @@ class _EngineBase:
         pipelined engine's in-flight groups) permute weights exactly once
         per plan."""
         hd = getattr(self.model, "hd", None)
-        if not (hd is not None and hd.Hp and hd.rep == 1):
-            return state, False, "rep>1 KV replication is not migratable"
-        G = hd.groups  # 1 = MHA; >1 = GQA, migrated at group granularity
+        if hd is None or not hd.Hp:
+            return state, False, "model has no addressable attention heads"
+        # Migration granularity: the supergroup Hp // Kp (== hd.groups for
+        # rep == 1).  For replicated KV (rep > 1) the controller's perms
+        # are supergroup-consistent, so q-side weights permute by head
+        # rows, kv-side weights by the induced Kp-row permutation, and the
+        # KvE replicated cache rows by its rep-expansion — every replica
+        # moves with its KV head, which is what makes rep>1 plans
+        # applicable at all (they used to be reported-but-skipped).
+        G = hd.Hp // hd.Kp if hd.Kp else 1
+        rep = hd.rep
         cache = state.get("cache")
         if not (isinstance(cache, dict) and "k" in cache
                 and cache["k"].ndim >= 4):
             return state, False, "state has no addressable KV cache"
         from repro.core.placement_bridge import (
-            apply_layer_head_perms, kv_group_perms, permute_model_heads,
-            permute_model_heads_layers, relative_perms)
+            apply_layer_head_perms, expand_kv_perms, kv_group_perms,
+            permute_model_heads, permute_model_heads_layers, relative_perms)
         rel = relative_perms(plan["prev_perms"], plan["perms"])
         # per-layer rows only map onto a cache whose LEADING axis is the
         # layer stack (dense (L,B,T,KvE,dh)); grouped stacks (VLM
@@ -269,17 +288,22 @@ class _EngineBase:
                                                          group_size=G)
             new["k"], new["v"] = apply_layer_head_perms(
                 cache["k"], cache["v"], rel,
-                layer_axis=0, head_axis=-2, group_size=G)
+                layer_axis=0, head_axis=-2, group_size=G, rep=rep)
             if "k_sc" in cache:   # int8 KV: per-(token,head) scales
                 new["k_sc"], new["v_sc"] = apply_layer_head_perms(
                     cache["k_sc"], cache["v_sc"], rel,
-                    layer_axis=0, head_axis=-1, group_size=G)
+                    layer_axis=0, head_axis=-1, group_size=G, rep=rep)
             return dict(state, cache=new), True, None
         if rel.shape[0] == 1 or bool(np.all(rel == rel[0])):
             # one layout for every layer: global permutation broadcasts
             # over any leading stack axes (dense AND VLM (G,4,...))
-            rkv = jnp.asarray(kv_group_perms(rel[:1], G)[0]) if G > 1 \
-                else jnp.asarray(rel[0])
+            if G > 1:
+                kv_rows = kv_group_perms(rel[:1], G)
+                if rep > 1:
+                    kv_rows = expand_kv_perms(kv_rows, rep)
+                rkv = jnp.asarray(kv_rows[0])
+            else:
+                rkv = jnp.asarray(rel[0])
             if permute_params:
                 self.params = permute_model_heads(self.params, rel[0],
                                                   group_size=G)

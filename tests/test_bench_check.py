@@ -1,0 +1,68 @@
+"""benchmarks/run.py --check regression gate: the row sets must match the
+committed baseline EXACTLY — baseline rows missing from a run fail
+(coverage loss) and fresh rows missing from the baseline fail too (an
+ungated row used to pass silently)."""
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:          # benchmarks/ is not a package
+    sys.path.insert(0, str(REPO_ROOT))      # importable from src/ alone
+
+from benchmarks.run import check_group  # noqa: E402
+
+
+def _write_baseline(tmp_path, key, rows):
+    path = tmp_path / f"BENCH_{key}.json"
+    path.write_text(json.dumps(rows))
+    return str(tmp_path)
+
+
+def _row(name, us=100.0, derived=""):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+def test_matching_rows_pass(tmp_path):
+    base = [_row("g/a", derived="tok_s=10.0"), _row("g/b")]
+    d = _write_baseline(tmp_path, "g", base)
+    fresh = [_row("g/a", derived="tok_s=10.5"), _row("g/b", us=101.0)]
+    assert check_group("g", fresh, d, 0.15, 0.15) == []
+
+
+def test_baseline_row_missing_from_run_fails(tmp_path):
+    d = _write_baseline(tmp_path, "g", [_row("g/a"), _row("g/b")])
+    fails = check_group("g", [_row("g/a")], d, 0.15, 0.15)
+    assert any("coverage loss" in f and "g/b" in f for f in fails)
+
+
+def test_new_row_name_fails_closed_and_is_listed(tmp_path):
+    """The former hole: a run whose group gained a new row name sailed
+    through ungated.  Now every unmatched row is listed in one clear
+    failure telling the user to refresh the baseline."""
+    d = _write_baseline(tmp_path, "g", [_row("g/a")])
+    fresh = [_row("g/a"), _row("g/renamed"), _row("g/brand_new")]
+    fails = check_group("g", fresh, d, 0.15, 0.15)
+    assert len(fails) == 1
+    assert "not in the baseline" in fails[0]
+    assert "g/brand_new" in fails[0] and "g/renamed" in fails[0]
+    assert "--json" in fails[0]          # the remediation is spelled out
+
+
+def test_rename_fails_on_both_sides(tmp_path):
+    """A renamed row reads as coverage loss on one side and an unmatched
+    new row on the other — both must surface."""
+    d = _write_baseline(tmp_path, "g", [_row("g/old")])
+    fails = check_group("g", [_row("g/new")], d, 0.15, 0.15)
+    assert any("g/old" in f and "coverage loss" in f for f in fails)
+    assert any("g/new" in f and "not in the baseline" in f for f in fails)
+
+
+def test_metric_regression_still_fails(tmp_path):
+    d = _write_baseline(tmp_path, "g", [_row("g/a", derived="tok_s=10.0")])
+    fails = check_group("g", [_row("g/a", derived="tok_s=8.0")], d,
+                        0.15, 0.15)
+    assert any("tok_s" in f for f in fails)
+    # improvements pass
+    assert check_group("g", [_row("g/a", derived="tok_s=12.0")], d,
+                       0.15, 0.15) == []

@@ -231,6 +231,134 @@ def test_gqa_migration_roundtrip_through_engine():
     assert all(e["reason"] is None for e in applied)
 
 
+# ---------------------------------- int8 (kv_quant) continuous serving
+def test_kv_quant_continuous_migration_roundtrip():
+    """supports_continuous no longer refuses kv_quant: the continuous
+    engine runs the int8 KV path (per-slot quantized writes, insert_slot
+    splices values AND scales), a controller migration physically applies
+    (values + per-(token, head) scale rows permuted together), and the
+    streams equal a migration-free run — on the jnp int8 path and through
+    the fused-int8 resident kernel."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from tests.conftest import reduced_config
+    from repro.serving.engine import ServingEngine, supports_continuous
+
+    cfg = reduced_config("llama3-8b", kv_quant=True)
+    assert supports_continuous(cfg) is None
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, size=n) for n in (5, 11, 8, 14, 6)]
+
+    def run(lam, straggle_at, use_kernel=False):
+        eng = ServingEngine(cfg, n_slots=2, max_seq=64, lam=lam, seed=0,
+                            net=DeviceNetwork.sample(2, seed=1),
+                            use_kernel=use_kernel)
+        assert eng.state["cache"]["k"].dtype == jnp.int8
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=10 + 3 * (i % 2))
+        while True:
+            if straggle_at is not None and eng.decode_steps == straggle_at:
+                dev = int(eng.controller.head_counts().argmax())
+                eng.net.inject_straggler(dev, slowdown=500.0)
+            if not eng.step():
+                break
+        return {r.rid: r.out_tokens for r in eng.finished}, eng
+
+    with_mig, eng = run(3, straggle_at=4)
+    without, _ = run(10 ** 9, None)
+    assert with_mig == without and len(with_mig) == 5
+    applied = [e for e in eng.migration_log
+               if e["applied"] and e["n_migrations"]]
+    assert applied, "int8 migration skipped instead of applied"
+    assert all(e["reason"] is None for e in applied)
+    # fused-int8 resident kernel: same streams, before AND after migration
+    kern_mig, keng = run(3, straggle_at=4, use_kernel=True)
+    assert kern_mig == without
+    assert [e for e in keng.migration_log
+            if e["applied"] and e["n_migrations"]]
+
+
+# ----------------------------------- rep>1 replica-aware KV migration
+def test_rep_gt1_migration_applies_with_logits_invariance():
+    """tp > n_kv_heads replicates KV heads (HeadDims.rep > 1); migration
+    used to return (state, False, "rep>1 ..."). Supergroup-consistent
+    permutations now move q-head rows with their replicated KV rows:
+    per-layer perms applied to weights AND cache leave the next decode
+    step's logits invariant."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from tests.conftest import reduced_config
+    from repro.core.placement_bridge import (expand_kv_perms,
+                                             permute_model_heads_layers)
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config("llama3-8b", n_heads=8, d_head=8, n_kv_heads=2)
+    eng = ServingEngine(cfg, n_slots=2, max_seq=48, lam=10 ** 9, seed=0,
+                        tp=4, net=DeviceNetwork.sample(4, seed=1))
+    hd = eng.model.hd
+    assert (hd.rep, hd.Kp, hd.KvE) == (2, 2, 4)
+    rng = np.random.default_rng(0)
+    for n in (5, 9):
+        eng.submit(rng.integers(0, 97, size=n), max_new_tokens=4)
+    eng._admit()
+    for _ in range(2):
+        eng.step()
+    ref, _ = eng.model.decode_step(eng.params, eng.state,
+                                   jnp.asarray(eng._next))
+    # layer 0 swaps the two supergroups (Hp//Kp = 4 heads each), layer 1
+    # stays — a genuinely per-layer replica-aware move
+    perms = np.array([[4, 5, 6, 7, 0, 1, 2, 3], np.arange(8)])
+    params2 = permute_model_heads_layers(eng.params, perms, group_size=4)
+    np.testing.assert_array_equal(
+        expand_kv_perms(np.array([[1, 0]]), 2), [[2, 3, 0, 1]])
+    k2, v2 = apply_layer_head_perms(eng.state["cache"]["k"],
+                                    eng.state["cache"]["v"], perms,
+                                    layer_axis=0, head_axis=-2,
+                                    group_size=4, rep=2)
+    assert not np.array_equal(np.asarray(k2),
+                              np.asarray(eng.state["cache"]["k"]))
+    state2 = dict(eng.state, cache=dict(eng.state["cache"], k=k2, v=v2))
+    out, _ = eng.model.decode_step(params2, state2, jnp.asarray(eng._next))
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rep_gt1_migration_roundtrip_through_engine():
+    """End-to-end: a rep>1 engine's controller migration applies (no
+    'rep>1 KV replication is not migratable' skip) and streams equal the
+    migration-free run."""
+    pytest.importorskip("jax")
+    from tests.conftest import reduced_config
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config("llama3-8b", n_heads=8, d_head=8, n_kv_heads=2)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, size=n) for n in (5, 11, 8, 14, 6)]
+
+    def run(lam, straggle_at):
+        eng = ServingEngine(cfg, n_slots=2, max_seq=64, lam=lam, seed=0,
+                            tp=4, net=DeviceNetwork.sample(4, seed=1))
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=10 + 3 * (i % 2))
+        while True:
+            if straggle_at is not None and eng.decode_steps == straggle_at:
+                dev = int(eng.controller.head_counts().argmax())
+                eng.net.inject_straggler(dev, slowdown=500.0)
+            if not eng.step():
+                break
+        return {r.rid: r.out_tokens for r in eng.finished}, eng
+
+    with_mig, eng = run(3, straggle_at=4)
+    without, _ = run(10 ** 9, None)
+    assert with_mig == without and len(with_mig) == 5
+    applied = [e for e in eng.migration_log
+               if e["applied"] and e["n_migrations"]]
+    assert applied, "rep>1 migration still reported-but-skipped"
+    assert all(e["reason"] is None for e in applied)
+    assert not any("rep>1" in (e["reason"] or "")
+                   for e in eng.migration_log)
+
+
 # ----------------------------------------------------- VLM slot wiring
 def test_vlm_requests_are_slot_wired():
     """VLM decode states (img_kv, grouped caches) splice per slot: each
