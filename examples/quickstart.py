@@ -42,8 +42,11 @@ for i in range(10):
 # 3) autoregressive generation through the cache path
 prompt = jnp.arange(8, dtype=jnp.int32)[None, :]
 state = model.init_decode_state(params, batch=1, max_seq=32)
-logits, state = jax.jit(model.prefill)(params, state, prompt)
-decode = jax.jit(model.decode_step)
+# donate the state: the KV cache updates in place instead of allocating
+# a second cache every step (repro.analysis lint RPR005 enforces this)
+logits, state = jax.jit(model.prefill, donate_argnums=(1,))(
+    params, state, prompt)
+decode = jax.jit(model.decode_step, donate_argnums=(1,))
 out = []
 tok = jnp.argmax(logits, -1)
 for _ in range(12):

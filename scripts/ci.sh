@@ -23,7 +23,13 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# 3. one pytest invocation: the default profile deselects slow tests
+# 3. hot-path auditor: repo-invariant RPR lints, jaxpr audit of the
+#    jitted hot functions, and the optimized-HLO audit of the compiled
+#    decode path against src/repro/analysis/baselines.json.  A FAILING
+#    gate: unwaived findings exit non-zero before the suite runs.
+python -m repro.analysis
+
+# 4. one pytest invocation: the default profile deselects slow tests
 #    (pyproject addopts); RUN_SLOW_TESTS=1 widens the -m expression so
 #    slow AND fast run in the same session instead of two from-scratch
 #    suite runs.
@@ -33,7 +39,7 @@ else
     python -m pytest -x -q "$@"
 fi
 
-# 4. benchmark smoke + regression gate: output stays visible (failures
+# 5. benchmark smoke + regression gate: output stays visible (failures
 #    used to vanish into /dev/null) and a >15% latency / tokens-per-sec
 #    regression vs the committed baselines fails the build.  Raw
 #    wall-clock rows are only comparable within one machine class, so

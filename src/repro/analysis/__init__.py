@@ -1,0 +1,52 @@
+"""Hot-path auditor: static analysis for the decode loop + repo lints.
+
+The paper's premise is serving under tight edge memory/latency budgets,
+so this package makes the *compiled* cost of the serving hot path a
+checked artifact (the same fail-closed philosophy as
+``benchmarks/run.py --check``):
+
+``jaxpr_audit``
+    Abstractly traces the engine's jitted hot functions (``decode_step``,
+    ``prefill_bucketed``, ``insert_slot``, the resident-kernel dispatch)
+    and walks the jaxprs for implicit dtype promotions on cache-sized
+    arrays, host callbacks inside jit, and large closure-captured
+    constants (retrace / bake-in hazards).
+
+``hlo_audit``
+    Reuses and extends ``repro.launch.hlo_analysis`` on the OPTIMIZED
+    decode HLO: donation failures (cache-sized outputs that are not
+    input/output-aliased, full-cache copies of parameters), a
+    recompile-ladder census over the prefill buckets, and op/byte budgets
+    against the committed ``baselines.json``.
+
+``lints``
+    Standalone AST lints (RPR0xx codes, no jax import) encoding the bug
+    classes previous PRs fixed by hand: PRNGKey reuse / loop-counter
+    keys, ``subprocess`` env dicts that drop ``JAX_PLATFORMS``, swallowed
+    broad ``except`` handlers, host round-trips inside jit-stepping
+    loops, and ``jax.jit`` of state-carrying signatures without
+    ``donate_argnums``.  Waive a true-but-intended hit inline with
+    ``# rpr: ignore[CODE] -- reason``.
+
+CLI: ``python -m repro.analysis [lint|jaxpr|hlo ...]`` — exits non-zero
+on any unwaived finding; wired into ``scripts/ci.sh`` and the GitHub
+workflow as a failing gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One auditor hit.  ``code`` families: RPR0xx (AST lints), JXP0xx
+    (jaxpr audit), HLO0xx (compiled-HLO audit)."""
+    code: str
+    where: str            # "path:line" or "function/op" locator
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.code} {self.where}: {self.message}"
+
+
+__all__ = ["Finding"]

@@ -1,0 +1,92 @@
+"""CLI for the hot-path auditor.
+
+    PYTHONPATH=src python -m repro.analysis [pass ...] [options]
+
+Passes (default: all three):
+    lint    repo-invariant RPR0xx AST lints (stdlib-only, no jax)
+    jaxpr   abstract-trace audit of the jitted hot functions (JXP0xx)
+    hlo     optimized-HLO audit of the compiled decode path (HLO0xx)
+
+Options:
+    --paths P [P ...]     lint roots (default: src benchmarks examples
+                          tests scripts)
+    --update-baselines    refresh src/repro/analysis/baselines.json from
+                          the current build, then exit 0
+    --json                machine-readable findings on stdout
+
+Exit status: 0 when clean, 1 on any unwaived finding — wired into
+scripts/ci.sh (after ruff, before pytest) and the ci.yml audit job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+DEFAULT_LINT_PATHS = ["src", "benchmarks", "examples", "tests", "scripts"]
+PASSES = ("lint", "jaxpr", "hlo")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Hot-path auditor: jaxpr/HLO static analysis for the "
+                    "decode loop + repo-invariant lints")
+    # no argparse `choices`: its empty-default validation bug rejects the
+    # zero-arg (run everything) form on some 3.x versions
+    ap.add_argument("passes", nargs="*", metavar="{lint,jaxpr,hlo}",
+                    help="subset of passes to run (default: all)")
+    ap.add_argument("--paths", nargs="+", default=DEFAULT_LINT_PATHS)
+    ap.add_argument("--update-baselines", action="store_true")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    args = ap.parse_args(argv)
+    bad = set(args.passes) - set(PASSES)
+    if bad:
+        ap.error(f"unknown pass(es) {sorted(bad)} — choose from {PASSES}")
+    passes = tuple(args.passes) or PASSES
+
+    if args.update_baselines:
+        from repro.analysis.hlo_audit import BASELINES_PATH, update_baselines
+        vals = update_baselines()
+        print(f"[analysis] wrote {BASELINES_PATH}:")
+        for k, v in sorted(vals.items()):
+            print(f"    {k} = {v:g}")
+        return 0
+
+    findings = []
+    for name in PASSES:           # fixed order: cheap/standalone first
+        if name not in passes:
+            continue
+        t0 = time.monotonic()
+        if name == "lint":
+            from repro.analysis.lints import lint_paths
+            found = lint_paths(args.paths)
+        elif name == "jaxpr":
+            from repro.analysis.jaxpr_audit import audit_hot_functions
+            found = audit_hot_functions()
+        else:
+            from repro.analysis.hlo_audit import audit_compiled_hot_path
+            found = audit_compiled_hot_path()
+        dt = time.monotonic() - t0
+        if not args.as_json:
+            state = "clean" if not found else f"{len(found)} finding(s)"
+            print(f"[analysis] {name}: {state} ({dt:.1f}s)")
+        findings.extend(found)
+
+    if args.as_json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f"  {f}")
+        if findings:
+            print(f"[analysis] FAILED: {len(findings)} unwaived finding(s)"
+                  " — fix, or waive inline with `# rpr: ignore[CODE] -- "
+                  "reason` (lints) / refresh budgets (hlo)")
+        else:
+            print("[analysis] hot path audits clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

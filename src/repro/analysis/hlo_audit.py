@@ -1,0 +1,232 @@
+"""Optimized-HLO audit of the compiled decode hot path (HLO0xx).
+
+Builds the REAL serving engine (tiny dense config, CPU) so the audited
+artifacts are the engine's own jit wrappers — ``_decode_jit``,
+``_prefill_bucketed_jit``, ``_insert_jit`` — not look-alikes, then:
+
+HLO001  donation failure: a cache-sized ENTRY output with no
+        ``input_output_alias`` entry.  Without the alias the decode step
+        materializes a second full KV cache per call — the exact
+        per-device memory Algorithm 1 partitions.
+HLO002  full-cache copy-on-write: a ``copy`` op of at least cache size
+        whose operand chains back to a parameter — the input cache is
+        being duplicated instead of updated via in-place
+        ``dynamic-update-slice``.
+HLO003  recompile ladder: more distinct prefill lowerings than buckets
+        (or than the committed budget) — every extra lowering is an
+        unattributed multi-second stall in the serving loop.
+HLO004  op/byte budget: trip-multiplied ``dot_flops`` / ``hbm_bytes``
+        (``launch.hlo_analysis.full_analysis``) and collective-op counts
+        of the decode step drifted past ``baselines.json`` — the same
+        fail-closed philosophy as ``benchmarks/run.py --check``: a
+        missing baseline key fails with the refresh command instead of
+        silently passing.
+
+Refresh budgets after an intended change:
+``python -m repro.analysis hlo --update-baselines``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.analysis import Finding
+from repro.launch import hlo_analysis as H
+
+BASELINES_PATH = Path(__file__).with_name("baselines.json")
+REFRESH_CMD = ("PYTHONPATH=src python -m repro.analysis hlo "
+               "--update-baselines")
+# relative headroom before a drift fails: flops are deterministic given
+# the model; hbm bytes move a little across XLA releases
+TOLERANCES = {"dot_flops": 0.10, "hbm_bytes": 0.30, "collective_ops": 0.0,
+              "prefill_lowerings": 0.0, "full_cache_param_copies": 0.0}
+
+AUDIT_BUCKETS = (8, 16, 32, 64)
+_CACHE = {}
+
+
+def build_audit_setup() -> dict:
+    """The shared audit fixture: a tiny dense model + the abstract decode/
+    prefill/insert arguments (memoized — jaxpr and HLO passes share it)."""
+    if "setup" in _CACHE:
+        return _CACHE["setup"]
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import ModelConfig
+    from repro.serving.engine import ServingEngine
+
+    cfg = ModelConfig(
+        name="audit-tiny", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_head=16, d_ff=128, vocab_size=256,
+        rope_theta=10_000.0, norm_eps=1e-5)
+    eng = ServingEngine(cfg, n_slots=2, max_seq=64, lam=16, seed=0,
+                        buckets=AUDIT_BUCKETS)
+    m, params, state = eng.model, eng.params, eng.state
+    Lb = AUDIT_BUCKETS[1]
+    sub = m.init_decode_state(params, 1, Lb, per_slot=True)
+    setup = {
+        "cfg": cfg, "engine": eng, "model": m, "params": params,
+        "state": state, "tokens": jnp.zeros((2,), jnp.int32),
+        "buckets": AUDIT_BUCKETS,
+        "bucket_state": sub,
+        "bucket_tokens": jnp.zeros((1, Lb), jnp.int32),
+        "bucket_lengths": jnp.asarray([Lb // 2], jnp.int32),
+        "sub_state": m.init_decode_state(params, 1, Lb, per_slot=True),
+    }
+    _CACHE["setup"] = setup
+    return setup
+
+
+def cache_bytes_of(state) -> int:
+    k = state["cache"]["k"]
+    return int(k.size) * int(np.dtype(k.dtype).itemsize)
+
+
+def decode_hlo_text() -> str:
+    """Optimized HLO of the engine's OWN decode jit wrapper."""
+    if "decode_hlo" not in _CACHE:
+        s = build_audit_setup()
+        eng = s["engine"]
+        _CACHE["decode_hlo"] = eng._decode_jit.lower(
+            s["params"], s["state"], s["tokens"]).compile().as_text()
+    return _CACHE["decode_hlo"]
+
+
+def audit_decode_hlo(hlo_text: str, cache_bytes: int) -> List[Finding]:
+    """HLO001/HLO002 on one optimized module (pure text, testable on
+    committed fixtures)."""
+    findings: List[Finding] = []
+    aliases = H.input_output_aliases(hlo_text)
+    aliased_idx = {p[0] for p in aliases if len(p) >= 1}
+    outs = H.entry_output_shapes(hlo_text)
+    for i, (dtype, dims, nbytes) in enumerate(outs):
+        if nbytes >= cache_bytes and i not in aliased_idx:
+            findings.append(Finding(
+                "HLO001", f"decode_step/output[{i}]",
+                f"cache-sized output {dtype}[{dims}] ({nbytes} B) is not "
+                f"input/output-aliased — the jit does not donate the "
+                f"state, so every decode step allocates a second full KV "
+                f"cache; pass donate_argnums for the state argument"))
+    for c in H.find_copy_ops(hlo_text, min_bytes=cache_bytes):
+        if c["from_parameter"]:
+            findings.append(Finding(
+                "HLO002", f"decode_step/{c['computation']}/{c['name']}",
+                f"full-cache copy ({c['bytes']} B) of parameter-derived "
+                f"`{c['operand']}` — the input cache is duplicated "
+                f"instead of updated in place via dynamic-update-slice"))
+    return findings
+
+
+def prefill_ladder() -> Dict[str, int]:
+    """Distinct prefill lowerings across the engine's bucket set (the
+    compile ladder a serving process pays once per bucket — and must not
+    pay per prompt length)."""
+    if "ladder" in _CACHE:
+        return _CACHE["ladder"]
+    import jax.numpy as jnp
+    s = build_audit_setup()
+    eng, m, params = s["engine"], s["model"], s["params"]
+    seen = set()
+    for Lb in s["buckets"]:
+        sub = m.init_decode_state(params, 1, Lb, per_slot=True)
+        low = eng._prefill_bucketed_jit.lower(
+            params, sub, jnp.zeros((1, Lb), jnp.int32),
+            jnp.asarray([Lb // 2], jnp.int32))
+        seen.add(hash(low.as_text()))
+    # insert_slot must be ONE lowering for every slot index (traced slot)
+    low_a = eng._insert_jit.lower(s["state"], s["sub_state"], jnp.int32(0))
+    low_b = eng._insert_jit.lower(s["state"], s["sub_state"], jnp.int32(1))
+    insert_lowerings = len({hash(low_a.as_text()), hash(low_b.as_text())})
+    _CACHE["ladder"] = {"prefill_lowerings": len(seen),
+                        "n_buckets": len(s["buckets"]),
+                        "insert_lowerings": insert_lowerings}
+    return _CACHE["ladder"]
+
+
+def measure() -> Dict[str, float]:
+    """The budget-able numbers of the current build."""
+    s = build_audit_setup()
+    txt = decode_hlo_text()
+    full = H.full_analysis(txt)
+    coll = H.collective_bytes(txt)
+    ladder = prefill_ladder()
+    n_coll = sum(coll["_counts"].values()) if "_counts" in coll else 0
+    cbytes = cache_bytes_of(s["state"])
+    param_copies = sum(1 for c in H.find_copy_ops(txt, min_bytes=cbytes)
+                      if c["from_parameter"])
+    return {
+        "dot_flops": float(full["dot_flops"]),
+        "hbm_bytes": float(full["hbm_bytes"]),
+        "collective_ops": float(n_coll),
+        "prefill_lowerings": float(ladder["prefill_lowerings"]),
+        "insert_lowerings": float(ladder["insert_lowerings"]),
+        "full_cache_param_copies": float(param_copies),
+        "aliased_outputs": float(len(H.input_output_aliases(txt))),
+    }
+
+
+def update_baselines(path: Path = BASELINES_PATH) -> Dict[str, float]:
+    vals = measure()
+    payload = {
+        "_meta": {
+            "model": "audit-tiny (2L, d64, 4h, B2, T64)",
+            "refresh": REFRESH_CMD,
+            "note": "budgets for the compiled decode hot path; counts "
+                    "gate exactly, flops/bytes gate at TOLERANCES",
+        },
+        "decode_step": vals,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return vals
+
+
+def audit_budgets(path: Path = BASELINES_PATH) -> List[Finding]:
+    """HLO004: fail-closed comparison against the committed budget."""
+    if not path.exists():
+        return [Finding("HLO004", str(path),
+                        f"budget file missing — the gate cannot pass "
+                        f"without one; run `{REFRESH_CMD}`")]
+    base = json.loads(path.read_text()).get("decode_step", {})
+    vals = measure()
+    findings: List[Finding] = []
+    for key, tol in TOLERANCES.items():
+        if key not in base:
+            findings.append(Finding(
+                "HLO004", f"baselines.json/{key}",
+                f"no committed budget for `{key}` (fresh value "
+                f"{vals[key]:g}) — fail-closed; run `{REFRESH_CMD}`"))
+            continue
+        b, v = float(base[key]), float(vals[key])
+        limit = b * (1.0 + tol) if b > 0 else b
+        if v > limit:
+            findings.append(Finding(
+                "HLO004", f"decode_step/{key}",
+                f"{key} regressed: {v:g} > budget {b:g} (+{tol:.0%} "
+                f"headroom) — an unpriced cost crept into the decode hot "
+                f"path; fix it or refresh via `{REFRESH_CMD}`"))
+    return findings
+
+
+def audit_compiled_hot_path() -> List[Finding]:
+    """All HLO passes on the live build."""
+    s = build_audit_setup()
+    findings = audit_decode_hlo(decode_hlo_text(),
+                                cache_bytes_of(s["state"]))
+    ladder = prefill_ladder()
+    if ladder["prefill_lowerings"] > ladder["n_buckets"]:
+        findings.append(Finding(
+            "HLO003", "prefill_bucketed",
+            f"{ladder['prefill_lowerings']} distinct prefill lowerings "
+            f"for {ladder['n_buckets']} buckets — the bucket set no "
+            f"longer bounds the compile ladder"))
+    if ladder["insert_lowerings"] != 1:
+        findings.append(Finding(
+            "HLO003", "insert_slot",
+            f"insert_slot lowers {ladder['insert_lowerings']} times for "
+            f"two slot indices — the slot must stay a traced scalar so "
+            f"one compile serves every slot"))
+    findings.extend(audit_budgets())
+    return findings

@@ -1,0 +1,329 @@
+"""Repo-invariant AST lints (RPR0xx) — standalone, stdlib-only.
+
+Each rule encodes a bug class a previous PR fixed by hand, so the class
+cannot regress silently:
+
+RPR001  PRNGKey reuse / loop-counter keys.  ``jax.random.PRNGKey`` inside
+        a ``for``/``while`` body (same or correlated key every iteration)
+        or keyed off a counter attribute (``PRNGKey(self.decode_steps)``
+        — the PR 1 sampler bug).  Derive per-step keys with ``fold_in``
+        from one seed instead.
+RPR002  ``subprocess`` call whose literal ``env=`` dict drops
+        ``JAX_PLATFORMS`` without inheriting ``os.environ`` — jax in the
+        child probes accelerator plugins and hangs (PR 1 root cause).
+RPR003  Broad ``except``/``except Exception`` that swallows the fault:
+        the handler neither binds the exception nor uses it, so nothing
+        (a migration-path ``applied``/``reason`` log, a monitor event)
+        can record WHAT failed (PR 3's silent-skip class).
+RPR004  Host round-trip (``float()``/``int()``/``.item()``/
+        ``np.asarray``) on a per-step value inside a loop of a function
+        that drives jitted calls — an implicit device sync in the decode
+        hot loop.
+RPR005  ``jax.jit`` over a state-carrying signature (``decode_step``,
+        ``insert_slot``, ``prefill``, ``prefill_bucketed``) without
+        ``donate_argnums``: every step materializes a second full KV
+        cache — exactly the memory Algorithm 1 is partitioning.
+
+Waivers: end the offending line (or the line above) with
+``# rpr: ignore[RPR00N] -- reason``.  The reason is mandatory; a
+reasonless waiver is itself reported (RPR000).  ``[RPR00N]`` may list
+several comma-separated codes; omitting it waives every code on that
+line.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis import Finding
+
+SUBPROCESS_CALLS = {"run", "Popen", "check_output", "check_call", "call"}
+STATEFUL_JIT_TARGETS = {"decode_step", "insert_slot", "prefill",
+                        "prefill_bucketed"}
+HOST_ROUNDTRIP_NAMES = {"float", "int"}
+SEEDISH = re.compile(r"seed", re.I)
+_WAIVER_RE = re.compile(
+    r"#\s*rpr:\s*ignore(?:\[(?P<codes>[A-Z0-9,\s]+)\])?"
+    r"(?:\s*(?:--|—|:)\s*(?P<reason>\S.*))?")
+
+# paths never linted: seeded-violation fixtures + VCS/venv noise
+EXCLUDED_PARTS = {"fixtures", ".git", ".venv", "__pycache__",
+                  "node_modules", ".claude"}
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.random.PRNGKey' for Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    else:
+        return ""
+    return ".".join(reversed(parts))
+
+
+def _tail(node: ast.AST) -> str:
+    d = _dotted(node)
+    return d.rsplit(".", 1)[-1] if d else ""
+
+
+class _Waivers:
+    def __init__(self, source: str):
+        self.by_line = {}
+        self.findings: List[Finding] = []
+        lines = source.splitlines()
+        for i, line in enumerate(lines, start=1):
+            m = _WAIVER_RE.search(line)
+            if not m:
+                continue
+            codes = frozenset(
+                c.strip() for c in (m.group("codes") or "").split(",")
+                if c.strip()) or None           # None = waive any code
+            self._add(i, codes)
+            if line.lstrip().startswith("#"):
+                # standalone waiver comment (possibly a multi-line block):
+                # it covers the first CODE line below it
+                j = i
+                while j < len(lines) and \
+                        (not lines[j].strip()
+                         or lines[j].lstrip().startswith("#")):
+                    j += 1
+                self._add(j + 1, codes)
+            if not (m.group("reason") or "").strip():
+                self.findings.append(Finding(
+                    "RPR000", f"{{path}}:{i}",
+                    "waiver without a reason — write "
+                    "`# rpr: ignore[CODE] -- why this hit is intended`"))
+
+    def _add(self, line: int, codes):
+        prev = self.by_line.get(line, frozenset())
+        if codes is None or prev is None:
+            self.by_line[line] = None
+        else:
+            self.by_line[line] = prev | codes
+
+    def covers(self, line: int, code: str) -> bool:
+        codes = self.by_line.get(line, False)
+        return codes is not False and (codes is None or code in codes)
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.findings: List[Finding] = []
+        self.waivers = _Waivers(source)
+        self.loop_depth = 0
+        # per-function: does it drive jitted calls (RPR004 scope)?
+        self._fn_stack: List[bool] = []
+
+    # ------------------------------------------------------------- helpers
+    def _emit(self, code: str, node: ast.AST, msg: str):
+        line = getattr(node, "lineno", 0)
+        if self.waivers.covers(line, code):
+            return
+        self.findings.append(Finding(code, f"{self.path}:{line}", msg))
+
+    def _names_in(self, node: ast.AST) -> Iterable[str]:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name):
+                yield n.id
+            elif isinstance(n, ast.Attribute):
+                yield n.attr
+
+    # --------------------------------------------------------------- scopes
+    def _visit_fn(self, node):
+        drives_jit = False
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                t = _tail(n.func)
+                if t.endswith("_jit") or t == "jit":
+                    drives_jit = True
+                    break
+        self._fn_stack.append(drives_jit)
+        saved, self.loop_depth = self.loop_depth, 0
+        self.generic_visit(node)
+        self.loop_depth = saved
+        self._fn_stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def _visit_loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+
+    # ---------------------------------------------------------------- rules
+    def visit_Call(self, node: ast.Call):
+        self._rule_prngkey(node)
+        self._rule_subprocess_env(node)
+        self._rule_host_roundtrip(node)
+        self._rule_undonated_jit(node)
+        self.generic_visit(node)
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        self._rule_swallowed_except(node)
+        self.generic_visit(node)
+
+    # RPR001 ---------------------------------------------------------------
+    def _rule_prngkey(self, node: ast.Call):
+        if _tail(node.func) != "PRNGKey":
+            return
+        if self.loop_depth > 0:
+            self._emit("RPR001", node,
+                       "PRNGKey inside a loop — the same (or a correlated "
+                       "loop-index) key every iteration; fold_in a step "
+                       "counter from ONE base key instead")
+            return
+        for arg in node.args:
+            attrs = [n.attr for n in ast.walk(arg)
+                     if isinstance(n, ast.Attribute)]
+            if attrs and not any(SEEDISH.search(a) for a in attrs):
+                self._emit("RPR001", node,
+                           f"PRNGKey({ast.unparse(arg)}) keys off mutable "
+                           "state — a counter revisits values across "
+                           "call sites (the PR 1 sampler collision); "
+                           "fold_in the counter from a seed-derived base")
+
+    # RPR002 ---------------------------------------------------------------
+    def _rule_subprocess_env(self, node: ast.Call):
+        d = _dotted(node.func)
+        if not (d.startswith("subprocess.") and
+                d.rsplit(".", 1)[-1] in SUBPROCESS_CALLS):
+            return
+        env_kw = next((k for k in node.keywords if k.arg == "env"), None)
+        if env_kw is None:
+            return                      # inherits the parent env: fine
+        v = env_kw.value
+        keys: List[Optional[str]] = []
+        spreads_environ = False
+        if isinstance(v, ast.Dict):
+            for k in v.keys:
+                if k is None:           # {**something}
+                    spreads_environ = True
+                elif isinstance(k, ast.Constant):
+                    keys.append(str(k.value))
+        elif isinstance(v, ast.Call) and _tail(v.func) == "dict":
+            for kw in v.keywords:
+                if kw.arg is None:
+                    spreads_environ = True
+                else:
+                    keys.append(kw.arg)
+        else:
+            return                      # built elsewhere: not analyzable
+        if spreads_environ or "JAX_PLATFORMS" in keys:
+            return
+        self._emit("RPR002", node,
+                   "subprocess env dict drops JAX_PLATFORMS — the child "
+                   "jax probes accelerator plugins and can hang (PR 1); "
+                   "spread **os.environ or set JAX_PLATFORMS explicitly")
+
+    # RPR003 ---------------------------------------------------------------
+    def _rule_swallowed_except(self, node: ast.ExceptHandler):
+        broad = node.type is None or _tail(node.type) in (
+            "Exception", "BaseException")
+        if not broad:
+            return
+        # a pure re-raise handler propagates the fault — nothing swallowed
+        if len(node.body) == 1 and isinstance(node.body[0], ast.Raise) \
+                and node.body[0].exc is None:
+            return
+        if node.name is None:
+            self._emit("RPR003", node,
+                       "broad except without binding the exception — the "
+                       "fault's type/message cannot reach any log "
+                       "(applied/reason, monitor events); bind `as e` "
+                       "and record it")
+            return
+        used = any(isinstance(n, ast.Name) and n.id == node.name
+                   for stmt in node.body for n in ast.walk(stmt))
+        if not used:
+            self._emit("RPR003", node,
+                       f"broad except binds `{node.name}` but never uses "
+                       "it — record the exception type/message before "
+                       "continuing")
+
+    # RPR004 ---------------------------------------------------------------
+    def _rule_host_roundtrip(self, node: ast.Call):
+        if self.loop_depth == 0 or not (self._fn_stack and
+                                        self._fn_stack[-1]):
+            return
+        t = _tail(node.func)
+        hit = None
+        if t == "item" and isinstance(node.func, ast.Attribute):
+            hit = ".item()"
+        elif _dotted(node.func) in ("np.asarray", "numpy.asarray",
+                                    "onp.asarray"):
+            hit = "np.asarray"
+        elif isinstance(node.func, ast.Name) and t in HOST_ROUNDTRIP_NAMES:
+            # float()/int() of a literal or len() is host-side anyway;
+            # flag conversions of computed/indexed values only
+            if node.args and not isinstance(node.args[0], ast.Constant) \
+                    and not (isinstance(node.args[0], ast.Call)
+                             and _tail(node.args[0].func) == "len"):
+                hit = f"{t}()"
+        if hit:
+            self._emit("RPR004", node,
+                       f"{hit} inside the stepping loop of a jit-driving "
+                       "function — a host device-sync per iteration; "
+                       "keep the value on device or hoist the transfer "
+                       "out of the loop")
+
+    # RPR005 ---------------------------------------------------------------
+    def _rule_undonated_jit(self, node: ast.Call):
+        if _dotted(node.func) not in ("jax.jit", "jit"):
+            return
+        if not node.args:
+            return
+        target = _tail(node.args[0])
+        if target not in STATEFUL_JIT_TARGETS:
+            return
+        kws = {k.arg for k in node.keywords}
+        if kws & {"donate_argnums", "donate_argnames"}:
+            return
+        self._emit("RPR005", node,
+                   f"jax.jit({ast.unparse(node.args[0])}) carries decode/"
+                   "cache state but donates nothing — every call "
+                   "materializes a second full KV cache; pass "
+                   "donate_argnums for the state argument")
+
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("RPR999", f"{path}:{e.lineno}",
+                        f"syntax error stops linting: {e.msg}")]
+    linter = _FileLinter(path, source)
+    linter.visit(tree)
+    out = linter.findings + [
+        Finding(f.code, f.where.format(path=path), f.message)
+        for f in linter.waivers.findings]
+    return sorted(out, key=lambda f: (f.where, f.code))
+
+
+def iter_python_files(roots: Sequence[str]) -> List[Path]:
+    files: List[Path] = []
+    for root in roots:
+        p = Path(root)
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+            continue
+        for f in sorted(p.rglob("*.py")):
+            if not EXCLUDED_PARTS.intersection(f.parts):
+                files.append(f)
+    return files
+
+
+def lint_paths(roots: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_python_files(roots):
+        findings.extend(lint_source(f.read_text(), str(f)))
+    return findings

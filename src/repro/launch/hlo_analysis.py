@@ -295,6 +295,100 @@ def _comp_cost(comp_text: str, comps: Dict[str, str]):
     return flops, hbm, whiles
 
 
+# ---------------------------------------------------------------------------
+# Donation / buffer-reuse introspection (used by repro.analysis.hlo_audit).
+#
+# A donated jit argument surfaces in the optimized HLO as an
+# ``input_output_alias={ {out_idx}: (param, {path}, may-alias), ... }``
+# module attribute; a donation FAILURE surfaces as the absence of that
+# alias for a cache-sized output, or as a full-cache ``copy`` whose
+# operand chains back to a parameter (copy-on-write of the input cache).
+# ---------------------------------------------------------------------------
+
+_ALIAS_ENTRY_RE = re.compile(r"\{\s*([0-9,\s]*)\}\s*:\s*\(\s*(\d+)")
+_ENTRY_LINE_RE = re.compile(r"^ENTRY\s+%?[\w.\-]+\s*\(.*?\)\s*->\s*(.+?)\s*\{?\s*$",
+                            re.M)
+
+
+def input_output_aliases(hlo_text: str) -> Dict[Tuple[int, ...], int]:
+    """{output tuple index path: parameter number} from the module's
+    ``input_output_alias`` attribute; empty when nothing is donated."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return {}
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, min(len(hlo_text), i + 100_000)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    else:
+        return {}
+    region = hlo_text[i + 1:j]
+    out: Dict[Tuple[int, ...], int] = {}
+    for m in _ALIAS_ENTRY_RE.finditer(region):
+        path = tuple(int(p) for p in m.group(1).split(",") if p.strip())
+        out[path] = int(m.group(2))
+    return out
+
+
+def entry_output_shapes(hlo_text: str):
+    """[(dtype, dims, bytes)] per ENTRY result tuple element, in order."""
+    m = _ENTRY_LINE_RE.search(hlo_text)
+    if not m:
+        return []
+    return [(d, s, _shape_bytes(d, s))
+            for d, s in _SHAPE_RE.findall(m.group(1))]
+
+
+def find_copy_ops(hlo_text: str, min_bytes: int = 0):
+    """Every ``copy`` op (async variants at -start) across all
+    computations, with its operand resolved through gte/bitcast/reshape
+    chains: [{name, bytes, computation, operand, operand_op,
+    from_parameter}].  ``from_parameter`` marks copies whose source is an
+    entry/loop parameter — the copy-on-write signature of a failed
+    donation."""
+    out = []
+    for comp_name, text in _split_computations(hlo_text).items():
+        ops, table = _parse_ops(text)
+        kinds = {name: op for name, _, op, _ in ops}
+        operands_of = {name: _OPERAND_RE.findall(rest.split(" calls=")[0]
+                                                 .split(" to_apply=")[0])
+                       for name, _, _, rest in ops}
+
+        def chases_to_param(name: str, hops: int = 6) -> bool:
+            while hops:
+                kind = kinds.get(name)
+                if kind == "parameter":
+                    return True
+                if kind not in ("get-tuple-element", "bitcast", "reshape",
+                                "copy"):
+                    return False
+                opnds = operands_of.get(name) or []
+                if not opnds:
+                    return False
+                name = opnds[0]
+                hops -= 1
+            return False
+
+        for name, tstr, op, rest in ops:
+            if op not in ("copy", "copy-start"):
+                continue
+            nbytes = _result_bytes(tstr)
+            if nbytes < min_bytes:
+                continue
+            opnds = operands_of[name]
+            src = opnds[0] if opnds else ""
+            out.append({
+                "name": name, "bytes": nbytes, "computation": comp_name,
+                "operand": src, "operand_op": kinds.get(src, "?"),
+                "from_parameter": chases_to_param(src)})
+    return out
+
+
 def full_analysis(hlo_text: str) -> Dict[str, float]:
     """Trip-multiplied {dot_flops, hbm_bytes} per device, plus the
     collective-bytes breakdown (collective_bytes())."""

@@ -36,6 +36,12 @@ class HeartbeatMonitor:
             for j in range(n_slots)}
         self.straggler_factor = straggler_factor
         self.heartbeat_timeout = heartbeat_timeout
+        # event log: faults/recoveries with their cause, bounded like the
+        # engine's sample_key_log (a long-running monitor must not grow)
+        self.events: Deque[dict] = deque(maxlen=4096)
+
+    def record_event(self, kind: str, **info):
+        self.events.append({"kind": kind, "t": time.monotonic(), **info})
 
     def record_step(self, slot: int, seconds: float):
         t = self.slots[slot]
@@ -89,20 +95,36 @@ class RestartPolicy:
     exponential backoff (production default 3 retries)."""
 
     def __init__(self, checkpointer, *, max_retries: int = 3,
-                 backoff_s: float = 5.0):
+                 backoff_s: float = 5.0,
+                 monitor: Optional[HeartbeatMonitor] = None):
         self.ckpt = checkpointer
         self.max_retries = max_retries
         self.backoff_s = backoff_s
         self.failures = 0
+        self.monitor = monitor
+        self.events: Deque[dict] = deque(maxlen=4096)
+
+    def _record_fault(self, e: BaseException, resume_step):
+        """What failed, not just that something failed: the exception
+        type/message lands in the policy's (and the monitor's) event log
+        so a swallowed retry is still attributable post-mortem."""
+        ev = {"kind": "worker_fault", "error_type": type(e).__name__,
+              "error": str(e), "failures": self.failures,
+              "resume_step": resume_step, "t": time.monotonic()}
+        self.events.append(ev)
+        if self.monitor is not None:
+            self.monitor.record_event(**ev)
 
     def run(self, train_fn: Callable[[Optional[int]], None]):
         """train_fn(resume_step) runs until completion or raises."""
         while True:
+            resume = self.ckpt.latest_step()
             try:
-                train_fn(self.ckpt.latest_step())
+                train_fn(resume)
                 return
-            except Exception:  # noqa: BLE001 — any worker fault
+            except Exception as e:  # noqa: BLE001 — any worker fault
                 self.failures += 1
+                self._record_fault(e, resume)
                 if self.failures > self.max_retries:
                     raise
                 time.sleep(self.backoff_s * 2 ** (self.failures - 1))

@@ -187,8 +187,19 @@ class _EngineBase:
         self.lam = lam
         self.decode_steps = 0
         self.migration_log: List[dict] = []
-        self._decode_jit = jax.jit(self.model.decode_step)
-        self._prefill_jit = jax.jit(self.model.prefill)
+        # Hot-path jits DONATE their state argument: the decode state's
+        # KV cache is then input/output-aliased by XLA instead of
+        # materializing a second full cache every step — the cache is
+        # exactly the per-device memory Algorithm 1 partitions, so an
+        # undonated buffer silently doubles it.  The HLO pass of
+        # ``python -m repro.analysis`` asserts the aliasing (and zero
+        # full-cache parameter copies) on the optimized decode HLO; the
+        # caller contract is that every donated state is dead after the
+        # call (all call sites reassign, see step()/_admit()).
+        self._decode_jit = jax.jit(self.model.decode_step,
+                                   donate_argnums=(1,))
+        self._prefill_jit = jax.jit(self.model.prefill,
+                                    donate_argnums=(1,))
         # sampler: one fresh fold_in key per _sample call — the post-prefill
         # sample and the first post-decode sample can no longer collide on
         # the same PRNGKey(decode_steps) counter value.
@@ -407,8 +418,12 @@ class ServingEngine(_EngineBase):
             for _ in range(self.pipeline_k)]
         self.slots: List[Optional[Request]] = [None] * self.n_slots
         self._next = np.zeros(self.n_slots, np.int32)
-        self._prefill_bucketed_jit = jax.jit(self.model.prefill_bucketed)
-        self._insert_jit = jax.jit(self.model.insert_slot)
+        # donate like _decode_jit: the bucketed sub-state and the spliced
+        # slot state are dead after each call (reassigned in _admit)
+        self._prefill_bucketed_jit = jax.jit(self.model.prefill_bucketed,
+                                             donate_argnums=(1,))
+        self._insert_jit = jax.jit(self.model.insert_slot,
+                                   donate_argnums=(0,))
         # observability: scheduler decisions + compile boundedness (bounded,
         # like sample_key_log: a serving loop must not grow per request)
         self.admission_log: Deque[dict] = \
@@ -549,6 +564,9 @@ class ServingEngine(_EngineBase):
             self.states[g] = self._insert_jit(self.states[g], sub, row)
             r.t_first = time.monotonic()
             self.slots[s] = r
+            # rpr: ignore[RPR004] -- the admission-time sample IS the
+            # scheduler's sync point: the first token must reach the host
+            # to seed _next before the slot can decode
             tok = int(self._sample(logits)[0])
             self._next[s] = tok
             r.out_tokens.append(tok)
@@ -599,6 +617,8 @@ class ServingEngine(_EngineBase):
         if active:
             self.slot_busy_steps += len(active)
             for s in active:
+                # rpr: ignore[RPR004] -- post-block_until_ready host read:
+                # the scheduler needs concrete tokens for retire/admit
                 tok = int(toks[s - lo])
                 self.slots[s].out_tokens.append(tok)
                 self._next[s] = tok
@@ -661,6 +681,8 @@ class WaveServingEngine(_EngineBase):
         nxt = self._sample(logits)
         while active and self.decode_steps < max_steps:
             for i, r in list(active.items()):
+                # rpr: ignore[RPR004] -- wave scheduler's finish check
+                # runs on host tokens; nxt is already device-synced
                 r.out_tokens.append(int(nxt[i]))
                 if (len(r.out_tokens) >= r.max_new_tokens
                         or L0 + len(r.out_tokens) >= self.max_seq - 1):

@@ -1,0 +1,71 @@
+"""Seeded RPR violations — the lint self-test corpus.
+
+Never linted by the repo gate (``fixtures`` is in
+``repro.analysis.lints.EXCLUDED_PARTS``); ``tests/test_analysis.py``
+lints this file explicitly and asserts every rule fires exactly where
+planted.  Each function is one violation class, deliberately wrong.
+"""
+import subprocess
+
+import jax
+import numpy as np
+
+
+def reused_key_in_loop(n):
+    # RPR001: the same key every iteration — every "sample" is identical
+    outs = []
+    for _ in range(n):
+        key = jax.random.PRNGKey(0)
+        outs.append(jax.random.normal(key, (4,)))
+    return outs
+
+
+class Sampler:
+    def counter_key(self):
+        # RPR001: keys off a mutable counter — collides across call sites
+        return jax.random.PRNGKey(self.decode_steps)
+
+
+def child_without_platforms(cmd):
+    # RPR002: literal env drops JAX_PLATFORMS — the child jax probes
+    # accelerator plugins and hangs
+    return subprocess.run(cmd, env={"PATH": "/usr/bin"})
+
+
+def swallow(fn):
+    try:
+        fn()
+    except Exception:
+        # RPR003: nothing bound, nothing recorded
+        return None
+
+
+def swallow_bound_unused(fn):
+    try:
+        fn()
+    except Exception as e:
+        # RPR003: binds `e` but never records it
+        return None
+
+
+def decode_loop(model, params, state, tok):
+    step = jax.jit(model.decode_step)  # RPR005: no donate_argnums
+    for _ in range(8):
+        logits, state = step(params, state, tok)
+        tok = int(np.argmax(logits))  # RPR004: host sync per step
+    return tok
+
+
+def waived_without_reason(fn):
+    try:
+        fn()
+    except Exception:  # rpr: ignore[RPR003]
+        return None  # the waiver above is reasonless -> RPR000
+
+
+def properly_waived(fn):
+    try:
+        fn()
+    # rpr: ignore[RPR003] -- fixture: a reasoned waiver must suppress
+    except Exception:
+        return None

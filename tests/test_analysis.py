@@ -1,0 +1,309 @@
+"""Self-tests for the hot-path auditor (repro.analysis).
+
+Three layers:
+  1. seeded-violation fixtures (tests/fixtures/rpr, tests/fixtures/hlo)
+     each FAIL their pass — the auditor's rules actually fire;
+  2. the live repo audits CLEAN — the gate in scripts/ci.sh lands green;
+  3. the satellite fixes hold: the engine's decode jit donates (aliased
+     cache outputs, zero full-cache parameter copies) with the token
+     stream bit-identical to the undonated jit, and RestartPolicy
+     records WHAT failed, not just that something failed.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import Finding, hlo_audit, jaxpr_audit
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.lints import iter_python_files, lint_paths, lint_source
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+LINT_FIXTURE = REPO / "tests" / "fixtures" / "rpr" / "lint_violations.py"
+HLO_FIXTURES = REPO / "tests" / "fixtures" / "hlo"
+LINT_ROOTS = [str(REPO / p) for p in
+              ("src", "benchmarks", "examples", "tests", "scripts")]
+
+
+def _codes(findings):
+    out = {}
+    for f in findings:
+        out[f.code] = out.get(f.code, 0) + 1
+    return out
+
+
+# ------------------------------------------------------------ RPR lint pass
+class TestLintFixture:
+    def test_every_seeded_violation_fires(self):
+        found = _codes(lint_source(LINT_FIXTURE.read_text(),
+                                   str(LINT_FIXTURE)))
+        assert found == {
+            "RPR000": 1,  # reasonless waiver
+            "RPR001": 2,  # in-loop key + counter-attribute key
+            "RPR002": 1,  # env drops JAX_PLATFORMS
+            "RPR003": 2,  # unbound + bound-but-unused broad except
+            "RPR004": 1,  # int() sync inside the decode loop
+            "RPR005": 1,  # undonated stateful jit
+        }
+
+    def test_fixture_excluded_from_directory_scan(self):
+        files = iter_python_files([str(REPO / "tests")])
+        assert LINT_FIXTURE not in files
+        # ...but lintable when named explicitly (how this test reads it)
+        assert iter_python_files([str(LINT_FIXTURE)]) == [LINT_FIXTURE]
+
+    def test_waiver_with_reason_suppresses(self):
+        src = ("import jax\n"
+               "def f(xs):\n"
+               "    for x in xs:\n"
+               "        k = jax.random.PRNGKey(0)"
+               "  # rpr: ignore[RPR001] -- test corpus needs a fixed key\n"
+               "        yield k\n")
+        assert lint_source(src) == []
+
+    def test_waiver_wrong_code_does_not_suppress(self):
+        src = ("import jax\n"
+               "def f(xs):\n"
+               "    for x in xs:\n"
+               "        k = jax.random.PRNGKey(0)"
+               "  # rpr: ignore[RPR005] -- mismatched code\n"
+               "        yield k\n")
+        assert "RPR001" in _codes(lint_source(src))
+
+    def test_bare_raise_handler_is_not_swallowing(self):
+        src = ("def f(fn):\n"
+               "    try:\n"
+               "        return fn()\n"
+               "    except Exception:\n"
+               "        raise\n")
+        assert lint_source(src) == []
+
+    def test_env_spread_is_clean(self):
+        src = ("import os, subprocess\n"
+               "def f(cmd):\n"
+               "    return subprocess.run(cmd,"
+               " env={**os.environ, 'X': '1'})\n")
+        assert lint_source(src) == []
+
+    def test_repo_lints_clean(self):
+        # the CI gate: every violation in the live tree is fixed or waived
+        assert lint_paths(LINT_ROOTS) == []
+
+
+# ---------------------------------------------------------- jaxpr audit pass
+class TestJaxprAudit:
+    def test_jxp001_implicit_promotion_on_big_array(self):
+        def f(cache, upd):
+            return cache + upd  # bf16 + f32 silently widens the cache
+
+        jx = jax.make_jaxpr(f)(
+            jax.ShapeDtypeStruct((128, 128), jnp.bfloat16),
+            jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        assert "JXP001" in _codes(jaxpr_audit.audit_jaxpr(jx, "f"))
+
+    def test_jxp001_found_inside_scan_body(self):
+        def f(cache):
+            def body(c, _):
+                return c, c.astype(jnp.float32)
+            _, ys = jax.lax.scan(body, cache, None, length=2)
+            return ys
+
+        jx = jax.make_jaxpr(f)(
+            jax.ShapeDtypeStruct((64, 256), jnp.bfloat16))
+        assert "JXP001" in _codes(jaxpr_audit.audit_jaxpr(jx, "f"))
+
+    def test_jxp001_narrowing_is_fine(self):
+        def f(x):
+            return x.astype(jnp.bfloat16)
+
+        jx = jax.make_jaxpr(f)(
+            jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        assert jaxpr_audit.audit_jaxpr(jx, "f") == []
+
+    def test_jxp002_host_callback(self):
+        def f(x):
+            jax.debug.print("x={x}", x=x.sum())
+            return x * 2
+
+        jx = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((8,), jnp.float32))
+        assert "JXP002" in _codes(jaxpr_audit.audit_jaxpr(jx, "f"))
+
+    def test_jxp003_closure_captured_constant(self):
+        baked = np.ones((128, 128), np.float32)
+
+        def f(x):
+            return x + baked
+
+        jx = jax.make_jaxpr(f)(
+            jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        assert "JXP003" in _codes(jaxpr_audit.audit_jaxpr(jx, "f"))
+
+    def test_hot_functions_audit_clean(self):
+        assert jaxpr_audit.audit_hot_functions() == []
+
+
+# ------------------------------------------------------------ HLO audit pass
+CACHE_BYTES = 2 * 2 * 64 * 4 * 16 * 2  # audit-tiny bf16 KV cache
+
+
+class TestHloAuditFixtures:
+    def test_planted_donation_failure_fires_both_rules(self):
+        txt = (HLO_FIXTURES / "donation_failure.hlo").read_text()
+        found = _codes(hlo_audit.audit_decode_hlo(txt, CACHE_BYTES))
+        assert found == {"HLO001": 1, "HLO002": 1}
+
+    def test_aliased_in_place_module_is_clean(self):
+        txt = (HLO_FIXTURES / "donation_ok.hlo").read_text()
+        assert hlo_audit.audit_decode_hlo(txt, CACHE_BYTES) == []
+
+
+class TestHloAuditLive:
+    def test_engine_decode_jit_donates(self):
+        # the satellite fix: the engine's OWN decode jit must alias the
+        # cache outputs and copy nothing parameter-derived at cache size
+        s = hlo_audit.build_audit_setup()
+        cb = hlo_audit.cache_bytes_of(s["state"])
+        assert hlo_audit.audit_decode_hlo(hlo_audit.decode_hlo_text(),
+                                          cb) == []
+
+    def test_undonated_decode_jit_is_flagged(self):
+        # the pre-fix defect, reconstructed: jit without donate_argnums
+        s = hlo_audit.build_audit_setup()
+        txt = jax.jit(s["model"].decode_step).lower(
+            s["params"], s["state"], s["tokens"]).compile().as_text()
+        found = _codes(hlo_audit.audit_decode_hlo(
+            txt, hlo_audit.cache_bytes_of(s["state"])))
+        assert found.get("HLO001", 0) >= 2  # k and v caches both unaliased
+
+    def test_donation_streams_bit_identical(self):
+        s = hlo_audit.build_audit_setup()
+        m, params = s["model"], s["params"]
+        donated = jax.jit(m.decode_step, donate_argnums=(1,))
+        # rpr: ignore[RPR005] -- reference jit: proves donation changes
+        # nothing but buffer reuse
+        undonated = jax.jit(m.decode_step)
+
+        def run(step):
+            state = jax.tree_util.tree_map(
+                lambda x: jnp.array(x, copy=True), s["state"])
+            toks = jnp.zeros((2,), jnp.int32)
+            outs = []
+            for _ in range(4):
+                logits, state = step(params, state, toks)
+                toks = jnp.argmax(logits, -1).astype(jnp.int32)
+                outs.append(toks)
+            return np.stack([np.asarray(t) for t in outs])
+
+        np.testing.assert_array_equal(run(donated), run(undonated))
+
+    def test_prefill_ladder_bounded(self):
+        ladder = hlo_audit.prefill_ladder()
+        assert ladder["prefill_lowerings"] == ladder["n_buckets"]
+        assert ladder["insert_lowerings"] == 1
+
+    def test_budgets_fail_closed_on_missing_file(self, tmp_path):
+        found = hlo_audit.audit_budgets(tmp_path / "absent.json")
+        assert len(found) == 1 and found[0].code == "HLO004"
+        assert "--update-baselines" in found[0].message
+
+    def test_budgets_fail_closed_on_missing_key(self, tmp_path):
+        p = tmp_path / "partial.json"
+        p.write_text(json.dumps({"decode_step": {"dot_flops": 1e12}}))
+        found = hlo_audit.audit_budgets(p)
+        assert found and all(f.code == "HLO004" for f in found)
+        assert any("hbm_bytes" in f.where for f in found)
+
+    def test_budgets_catch_regression(self, tmp_path):
+        p = tmp_path / "tight.json"
+        p.write_text(json.dumps(
+            {"decode_step": {k: 0.0 for k in hlo_audit.TOLERANCES}}))
+        found = hlo_audit.audit_budgets(p)
+        assert any(f.code == "HLO004" and "dot_flops" in f.where
+                   for f in found)
+
+    def test_committed_baselines_pass(self):
+        assert hlo_audit.BASELINES_PATH.exists()
+        assert hlo_audit.audit_budgets() == []
+
+    def test_full_hlo_pass_clean(self):
+        assert hlo_audit.audit_compiled_hot_path() == []
+
+
+# ------------------------------------------------------------------- the CLI
+class TestCli:
+    def test_lint_pass_clean_repo_exits_zero(self, capsys):
+        rc = analysis_main(["lint", "--paths"] + LINT_ROOTS)
+        assert rc == 0
+        assert "lint: clean" in capsys.readouterr().out
+
+    def test_lint_pass_fixture_exits_nonzero(self, capsys):
+        rc = analysis_main(["lint", "--paths", str(LINT_FIXTURE)])
+        assert rc == 1
+        out = capsys.readouterr().out
+        assert "RPR005" in out and "FAILED" in out
+
+    def test_unknown_pass_rejected(self):
+        with pytest.raises(SystemExit):
+            analysis_main(["hlo2"])
+
+    def test_json_output_is_parseable(self, capsys):
+        rc = analysis_main(
+            ["lint", "--json", "--paths", str(LINT_FIXTURE)])
+        assert rc == 1
+        rows = json.loads(capsys.readouterr().out)
+        assert {"code", "where", "message"} <= set(rows[0])
+
+
+# ------------------------------------------- satellite: fault event logging
+class TestRestartPolicyEvents:
+    def test_fault_cause_is_recorded(self):
+        from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                                   RestartPolicy)
+
+        class Ckpt:
+            def latest_step(self):
+                return 7
+
+        calls = []
+
+        def train_fn(resume):
+            calls.append(resume)
+            if len(calls) < 3:
+                raise RuntimeError(f"device OOM on attempt {len(calls)}")
+
+        mon = HeartbeatMonitor(2)
+        pol = RestartPolicy(Ckpt(), max_retries=3, backoff_s=0.0,
+                            monitor=mon)
+        pol.run(train_fn)
+        assert calls == [7, 7, 7]
+        assert len(pol.events) == 2
+        ev = pol.events[0]
+        assert ev["error_type"] == "RuntimeError"
+        assert "device OOM on attempt 1" in ev["error"]
+        assert ev["resume_step"] == 7
+        # mirrored into the monitor's log for post-mortems
+        assert [e["kind"] for e in mon.events] == ["worker_fault"] * 2
+
+    def test_exhausted_retries_reraise_with_events(self):
+        from repro.runtime.fault_tolerance import RestartPolicy
+
+        class Ckpt:
+            def latest_step(self):
+                return None
+
+        def train_fn(resume):
+            raise ValueError("persistent corruption")
+
+        pol = RestartPolicy(Ckpt(), max_retries=1, backoff_s=0.0)
+        with pytest.raises(ValueError):
+            pol.run(train_fn)
+        assert len(pol.events) == 2
+        assert all(e["error_type"] == "ValueError" for e in pol.events)
+
+
+def test_finding_str():
+    f = Finding("RPR001", "x.py:3", "key reuse")
+    assert str(f) == "RPR001 x.py:3: key reuse"

@@ -1,0 +1,115 @@
+"""Unit tests for the optimized-HLO text parser (launch/hlo_analysis).
+
+All on small committed HLO fixtures (tests/fixtures/hlo/) — no jax, no
+compiles: these pin the parsing semantics the hot-path auditor
+(repro.analysis.hlo_audit) and the roofline benches both depend on.
+"""
+import pathlib
+
+from repro.launch import hlo_analysis as H
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "hlo"
+
+
+def _read(name: str) -> str:
+    return (FIXTURES / name).read_text()
+
+
+# --------------------------------------------------------------- while trips
+class TestWhileTripInference:
+    def test_trip_count_from_condition_constant(self):
+        comps = H._split_computations(_read("while_collectives.hlo"))
+        # cond compares the counter against constant(5)
+        assert H._trip_count(comps["cond.1"]) == 5
+
+    def test_trip_count_falls_back_to_one(self):
+        assert H._trip_count("no comparison constants here") == 1
+        # absurd constants (type-id noise) are not trip counts
+        assert H._trip_count("%c = s32[] constant(9999999)") == 1
+
+    def test_loop_body_collectives_are_trip_multiplied(self):
+        d = H.collective_bytes(_read("while_collectives.hlo"))
+        # body all-reduce: f32[128] = 512 B, x5 trips
+        assert d["all-reduce"] == 5 * 512.0
+        assert d["_counts"]["all-reduce"] == 5
+        # entry-level all-gather counted once: result f32[128] = 512 B
+        assert d["all-gather"] == 512.0
+        assert d["_counts"]["all-gather"] == 1
+
+
+# -------------------------------------------------------------- async pairs
+class TestAsyncCollectivePairs:
+    def test_start_done_pair_counted_once(self):
+        d = H.collective_bytes(_read("async_pair.hlo"))
+        # counted at -start (tuple result: f32[16] + f32[128] = 576 B);
+        # the -done must NOT double-count
+        assert d["_counts"]["all-gather"] == 1
+        assert d["all-gather"] == 576.0
+
+
+# ------------------------------------------------------- nested-call memoing
+class TestNestedCallMemoization:
+    def test_shared_callee_counted_per_call_site(self):
+        # entry -> mid_a -> leaf and entry -> mid_b -> leaf: the leaf's
+        # all-reduce (f32[64] = 256 B) is memoized once but billed at both
+        # call sites
+        d = H.collective_bytes(_read("nested_call.hlo"))
+        assert d["all-reduce"] == 2 * 256.0
+        assert d["_counts"]["all-reduce"] == 2
+
+    def test_reduction_to_apply_is_not_billed_as_call(self):
+        # the all-reduce's own to_apply=%scalar_add must not add bytes
+        d = H.collective_bytes(_read("nested_call.hlo"))
+        total = sum(v for k, v in d.items() if not k.startswith("_"))
+        assert total == 2 * 256.0
+
+
+# ------------------------------------------------------- layout-only fusion
+class TestLayoutOnlyFusionExclusion:
+    def test_layout_only_fusion_excluded_from_hbm(self):
+        full = H.full_analysis(_read("layout_fusion.hlo"))
+        # dot: out 64x64, k=64 -> 2*4096*64 flops; hbm = lhs+rhs+out f32
+        assert full["dot_flops"] == 2 * 64 * 64 * 64
+        assert full["hbm_bytes"] == 3 * 64 * 64 * 4
+
+    def test_compute_fusion_is_counted(self):
+        # same module, but the fused computation does real math: the
+        # fusion's operand+result traffic must now be billed
+        txt = _read("layout_fusion.hlo").replace("convert(", "exponential(")
+        full = H.full_analysis(txt)
+        fusion_bytes = 64 * 64 * 2 + 64 * 64 * 4  # bf16 in, f32 out
+        assert full["hbm_bytes"] == 3 * 64 * 64 * 4 + fusion_bytes
+        assert full["dot_flops"] == 2 * 64 * 64 * 64
+
+
+# ------------------------------------------------- donation introspection
+CACHE_BYTES = 2 * 2 * 64 * 4 * 16 * 2  # bf16[2,2,64,4,16]
+
+
+class TestDonationIntrospection:
+    def test_input_output_aliases_parsed(self):
+        aliases = H.input_output_aliases(_read("donation_ok.hlo"))
+        assert aliases == {(1,): 1}
+        assert H.input_output_aliases(_read("donation_failure.hlo")) == {}
+
+    def test_entry_output_shapes(self):
+        outs = H.entry_output_shapes(_read("donation_failure.hlo"))
+        assert outs == [("f32", "2,256", 2 * 256 * 4),
+                        ("bf16", "2,2,64,4,16", CACHE_BYTES)]
+
+    def test_find_copy_ops_chases_to_parameter(self):
+        copies = H.find_copy_ops(_read("donation_failure.hlo"),
+                                 min_bytes=CACHE_BYTES)
+        assert len(copies) == 1
+        c = copies[0]
+        assert c["bytes"] == CACHE_BYTES
+        assert c["operand"] == "Arg_1.2"
+        assert c["from_parameter"] is True
+
+    def test_min_bytes_filters_small_copies(self):
+        assert H.find_copy_ops(_read("donation_failure.hlo"),
+                               min_bytes=CACHE_BYTES + 1) == []
+
+    def test_in_place_update_module_has_no_param_copies(self):
+        assert H.find_copy_ops(_read("donation_ok.hlo"),
+                               min_bytes=CACHE_BYTES) == []

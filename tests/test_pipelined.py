@@ -402,10 +402,12 @@ def test_vlm_requests_are_slot_wired():
         logits, state = eng.model.prefill(
             eng.params, state, jnp.asarray(prompt[None], jnp.int32))
         toks = [int(jnp.argmax(logits[0]))]
-        step = jax.jit(eng.model.decode_step)
+        step = jax.jit(eng.model.decode_step, donate_argnums=(1,))
         for _ in range(4):
             logits, state = step(eng.params, state,
                                  jnp.asarray([toks[-1]], jnp.int32))
+            # rpr: ignore[RPR004] -- reference decoder reads its greedy
+            # stream back per step to feed the next token
             toks.append(int(jnp.argmax(logits[0])))
         return toks
 

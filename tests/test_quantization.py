@@ -72,7 +72,8 @@ def test_quantized_decode_state_and_steps_jit(rng_key):
     qp = quantize_params(m.init(rng_key))
     toks = jax.random.randint(rng_key, (2, 12), 0, cfg.vocab_size)
     st = m.init_decode_state(qp, 2, 24)
-    lg, st = jax.jit(m.prefill)(qp, st, toks)
-    lg2, st = jax.jit(m.decode_step)(qp, st, jnp.argmax(lg, -1))
+    lg, st = jax.jit(m.prefill, donate_argnums=(1,))(qp, st, toks)
+    lg2, st = jax.jit(m.decode_step, donate_argnums=(1,))(
+        qp, st, jnp.argmax(lg, -1))
     assert lg2.shape == (2, cfg.vocab_size)
     assert bool(jnp.isfinite(lg2).all())

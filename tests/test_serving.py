@@ -18,10 +18,12 @@ def _reference_tokens(model, params, prompt, n_tokens, max_seq):
     logits, state = model.prefill(params, state,
                                   jnp.asarray(prompt[None], jnp.int32))
     toks = [int(jnp.argmax(logits[0]))]
-    step = jax.jit(model.decode_step)
+    step = jax.jit(model.decode_step, donate_argnums=(1,))
     for _ in range(n_tokens - 1):
         logits, state = step(params, state,
                              jnp.asarray([toks[-1]], jnp.int32))
+        # rpr: ignore[RPR004] -- reference decoder: greedy stream must be
+        # read back per step to feed the next token
         toks.append(int(jnp.argmax(logits[0])))
     return toks
 
