@@ -35,6 +35,7 @@ MODULES = [
     ("fig4", "benchmarks.memory_vs_tokens"),            # Fig. 4
     ("scalability", "benchmarks.scalability"),          # §V.D(c) (+ layers)
     ("serving_throughput", "benchmarks.serving_throughput"),  # engine tok/s
+    ("paged_serving", "benchmarks.paged_serving"),      # paged KV capacity
     ("pipelined", "benchmarks.pipelined_decode"),       # K-in-flight tok/s
     ("pipeline_search", "benchmarks.pipeline_search"),  # bottleneck search
     ("kernels", "benchmarks.kernel_bench"),             # per-kernel

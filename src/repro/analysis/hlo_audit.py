@@ -80,6 +80,30 @@ def build_audit_setup() -> dict:
     return setup
 
 
+def build_paged_audit_setup() -> dict:
+    """Paged twin of :func:`build_audit_setup`: the SAME audit-tiny config
+    served through the paged engine (page_size 8), so the paged decode /
+    chunked-prefill / page-mount jits are audited as the engine builds
+    them (memoized)."""
+    if "paged_setup" in _CACHE:
+        return _CACHE["paged_setup"]
+    import jax.numpy as jnp
+    from repro.serving.engine import ServingEngine
+
+    cfg = build_audit_setup()["cfg"]
+    eng = ServingEngine(cfg, n_slots=2, max_seq=64, lam=16, seed=0,
+                        paged=True, page_size=8)
+    setup = {
+        "cfg": cfg, "engine": eng, "model": eng.model,
+        "params": eng.params, "state": eng.state,
+        "tokens": jnp.zeros((2,), jnp.int32),
+        "chunk_tokens": jnp.zeros((1, eng.prefill_chunk), jnp.int32),
+        "page_row": jnp.zeros((eng.pages_per_slot,), jnp.int32),
+    }
+    _CACHE["paged_setup"] = setup
+    return setup
+
+
 def cache_bytes_of(state) -> int:
     k = state["cache"]["k"]
     return int(k.size) * int(np.dtype(k.dtype).itemsize)
@@ -95,7 +119,17 @@ def decode_hlo_text() -> str:
     return _CACHE["decode_hlo"]
 
 
-def audit_decode_hlo(hlo_text: str, cache_bytes: int) -> List[Finding]:
+def paged_decode_hlo_text() -> str:
+    """Optimized HLO of the paged engine's decode jit (page-gather path)."""
+    if "paged_decode_hlo" not in _CACHE:
+        s = build_paged_audit_setup()
+        _CACHE["paged_decode_hlo"] = s["engine"]._decode_jit.lower(
+            s["params"], s["state"], s["tokens"]).compile().as_text()
+    return _CACHE["paged_decode_hlo"]
+
+
+def audit_decode_hlo(hlo_text: str, cache_bytes: int,
+                     where: str = "decode_step") -> List[Finding]:
     """HLO001/HLO002 on one optimized module (pure text, testable on
     committed fixtures)."""
     findings: List[Finding] = []
@@ -105,7 +139,7 @@ def audit_decode_hlo(hlo_text: str, cache_bytes: int) -> List[Finding]:
     for i, (dtype, dims, nbytes) in enumerate(outs):
         if nbytes >= cache_bytes and i not in aliased_idx:
             findings.append(Finding(
-                "HLO001", f"decode_step/output[{i}]",
+                "HLO001", f"{where}/output[{i}]",
                 f"cache-sized output {dtype}[{dims}] ({nbytes} B) is not "
                 f"input/output-aliased — the jit does not donate the "
                 f"state, so every decode step allocates a second full KV "
@@ -113,7 +147,7 @@ def audit_decode_hlo(hlo_text: str, cache_bytes: int) -> List[Finding]:
     for c in H.find_copy_ops(hlo_text, min_bytes=cache_bytes):
         if c["from_parameter"]:
             findings.append(Finding(
-                "HLO002", f"decode_step/{c['computation']}/{c['name']}",
+                "HLO002", f"{where}/{c['computation']}/{c['name']}",
                 f"full-cache copy ({c['bytes']} B) of parameter-derived "
                 f"`{c['operand']}` — the input cache is duplicated "
                 f"instead of updated in place via dynamic-update-slice"))
@@ -146,6 +180,31 @@ def prefill_ladder() -> Dict[str, int]:
     return _CACHE["ladder"]
 
 
+def paged_ladder() -> Dict[str, int]:
+    """Chunked prefill must be ONE lowering for every (row, start, length)
+    — the whole point of splicing prompts page-by-page through a fixed
+    chunk shape — and the page-table mount ONE lowering for every row."""
+    if "paged_ladder" in _CACHE:
+        return _CACHE["paged_ladder"]
+    import jax.numpy as jnp
+    s = build_paged_audit_setup()
+    eng = s["engine"]
+    seen = set()
+    for row, start, length in ((0, 0, 3), (1, 8, 8), (0, 16, 1)):
+        low = eng._paged_prefill_jit.lower(
+            s["params"], s["state"], s["chunk_tokens"], jnp.int32(row),
+            jnp.int32(start), jnp.int32(length))
+        seen.add(hash(low.as_text()))
+    mounts = set()
+    for row in (0, 1):
+        low = eng._mount_jit.lower(s["state"], jnp.int32(row),
+                                   s["page_row"], jnp.int32(0))
+        mounts.add(hash(low.as_text()))
+    _CACHE["paged_ladder"] = {"prefill_lowerings": len(seen),
+                              "mount_lowerings": len(mounts)}
+    return _CACHE["paged_ladder"]
+
+
 def measure() -> Dict[str, float]:
     """The budget-able numbers of the current build."""
     s = build_audit_setup()
@@ -168,6 +227,29 @@ def measure() -> Dict[str, float]:
     }
 
 
+def measure_paged() -> Dict[str, float]:
+    """Budget-able numbers for the paged decode hot path (same keys as
+    :func:`measure`, page-gather decode + chunked prefill + mount)."""
+    s = build_paged_audit_setup()
+    txt = paged_decode_hlo_text()
+    full = H.full_analysis(txt)
+    coll = H.collective_bytes(txt)
+    ladder = paged_ladder()
+    n_coll = sum(coll["_counts"].values()) if "_counts" in coll else 0
+    cbytes = cache_bytes_of(s["state"])
+    param_copies = sum(1 for c in H.find_copy_ops(txt, min_bytes=cbytes)
+                       if c["from_parameter"])
+    return {
+        "dot_flops": float(full["dot_flops"]),
+        "hbm_bytes": float(full["hbm_bytes"]),
+        "collective_ops": float(n_coll),
+        "prefill_lowerings": float(ladder["prefill_lowerings"]),
+        "insert_lowerings": float(ladder["mount_lowerings"]),
+        "full_cache_param_copies": float(param_copies),
+        "aliased_outputs": float(len(H.input_output_aliases(txt))),
+    }
+
+
 def update_baselines(path: Path = BASELINES_PATH) -> Dict[str, float]:
     vals = measure()
     payload = {
@@ -178,6 +260,7 @@ def update_baselines(path: Path = BASELINES_PATH) -> Dict[str, float]:
                     "gate exactly, flops/bytes gate at TOLERANCES",
         },
         "decode_step": vals,
+        "paged_decode_step": measure_paged(),
     }
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return vals
@@ -189,24 +272,26 @@ def audit_budgets(path: Path = BASELINES_PATH) -> List[Finding]:
         return [Finding("HLO004", str(path),
                         f"budget file missing — the gate cannot pass "
                         f"without one; run `{REFRESH_CMD}`")]
-    base = json.loads(path.read_text()).get("decode_step", {})
-    vals = measure()
+    doc = json.loads(path.read_text())
     findings: List[Finding] = []
-    for key, tol in TOLERANCES.items():
-        if key not in base:
-            findings.append(Finding(
-                "HLO004", f"baselines.json/{key}",
-                f"no committed budget for `{key}` (fresh value "
-                f"{vals[key]:g}) — fail-closed; run `{REFRESH_CMD}`"))
-            continue
-        b, v = float(base[key]), float(vals[key])
-        limit = b * (1.0 + tol) if b > 0 else b
-        if v > limit:
-            findings.append(Finding(
-                "HLO004", f"decode_step/{key}",
-                f"{key} regressed: {v:g} > budget {b:g} (+{tol:.0%} "
-                f"headroom) — an unpriced cost crept into the decode hot "
-                f"path; fix it or refresh via `{REFRESH_CMD}`"))
+    for section, vals in (("decode_step", measure()),
+                          ("paged_decode_step", measure_paged())):
+        base = doc.get(section, {})
+        for key, tol in TOLERANCES.items():
+            if key not in base:
+                findings.append(Finding(
+                    "HLO004", f"baselines.json/{section}/{key}",
+                    f"no committed budget for `{key}` (fresh value "
+                    f"{vals[key]:g}) — fail-closed; run `{REFRESH_CMD}`"))
+                continue
+            b, v = float(base[key]), float(vals[key])
+            limit = b * (1.0 + tol) if b > 0 else b
+            if v > limit:
+                findings.append(Finding(
+                    "HLO004", f"{section}/{key}",
+                    f"{key} regressed: {v:g} > budget {b:g} (+{tol:.0%} "
+                    f"headroom) — an unpriced cost crept into the decode "
+                    f"hot path; fix it or refresh via `{REFRESH_CMD}`"))
     return findings
 
 
@@ -228,5 +313,22 @@ def audit_compiled_hot_path() -> List[Finding]:
             f"insert_slot lowers {ladder['insert_lowerings']} times for "
             f"two slot indices — the slot must stay a traced scalar so "
             f"one compile serves every slot"))
+    ps = build_paged_audit_setup()
+    findings.extend(audit_decode_hlo(paged_decode_hlo_text(),
+                                     cache_bytes_of(ps["state"]),
+                                     where="paged_decode_step"))
+    pl = paged_ladder()
+    if pl["prefill_lowerings"] != 1:
+        findings.append(Finding(
+            "HLO003", "prefill_paged",
+            f"chunked prefill lowers {pl['prefill_lowerings']} times "
+            f"across (row, start, length) variations — the chunk shape "
+            f"is fixed and all placement scalars must stay traced so "
+            f"ONE compile splices every prompt"))
+    if pl["mount_lowerings"] != 1:
+        findings.append(Finding(
+            "HLO003", "mount_slot_pages",
+            f"page-table mount lowers {pl['mount_lowerings']} times for "
+            f"two rows — the row must stay a traced scalar"))
     findings.extend(audit_budgets())
     return findings

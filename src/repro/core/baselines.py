@@ -110,6 +110,13 @@ class ResourceAwarePolicy(Policy):
         self.chain_seed = chain_seed
         self.search_rounds = search_rounds
         self.min_gain = min_gain
+        # chain re-seed memo: the ``prev`` placement the chain candidate
+        # last LOST against.  While the incumbent is unchanged the seed
+        # is deterministic in (blocks, cost) and the race re-runs to the
+        # same verdict, so the whole seed+refine pass is skipped.
+        self._chain_lost_to = None
+        self.chain_reseeds = 0
+        self.chain_reseed_skips = 0
         multi = graph_of(self.blocks).n_layers > 1
         self.refine_passes = (1 if multi else 0) \
             if refine_passes is None else refine_passes
@@ -179,6 +186,11 @@ class ResourceAwarePolicy(Policy):
                                  rounds=self.search_rounds)
         if not self.chain_seed:
             return cand
+        if self._chain_lost_to is not None and prev is not None and \
+                np.array_equal(prev, self._chain_lost_to):
+            self.chain_reseed_skips += 1
+            return cand
+        self.chain_reseeds += 1
         seed = stage_balanced_chain(self.blocks, self.cost, net, tau,
                                     pipeline_k=k)
         if seed is None:
@@ -195,7 +207,10 @@ class ResourceAwarePolicy(Policy):
         # never-worse-than-rescoring guarantee survives either way
         if a_pipe <= c_pipe + 1e-15 and \
                 self.amortize * a_pipe + a_mig < self.amortize * c_pipe + c_mig:
+            self._chain_lost_to = None
             return alt
+        self._chain_lost_to = None if prev is None else \
+            np.asarray(prev).copy()
         return cand
 
 

@@ -225,6 +225,11 @@ class CostModel:
     compute_mode: str = "paper"
     flops_per_mac: int = 2       # Table I counts MACs; FLOPs = 2x
     layer_mode: str = "columns"
+    # page-granular KV (serving engines with a paged cache): the cache
+    # term of a head block is rounded UP to whole pages, so migration/
+    # memory pricing matches what the engine actually allocates and
+    # moves — live pages, not a dense max_seq reservation.  0 = dense.
+    page_size: int = 0
 
     def __post_init__(self):
         if self.layer_mode not in LAYER_MODES:
@@ -256,10 +261,12 @@ class CostModel:
         L = self.seq_len(tau)
         if block.kind == HEAD:
             base = 3 * L * d * b + 3 * D * d * b
+            t = tau if self.page_size <= 0 \
+                else -(-tau // self.page_size) * self.page_size
             if self.cache_mode == "paper":
-                cache = tau * D * b
+                cache = t * D * b
             else:
-                cache = 2 * tau * d * b
+                cache = 2 * t * d * b
             return float(self._scale * (base + cache))
         if block.kind == PROJ:
             return float(self._scale * L * D * b)

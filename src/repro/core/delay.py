@@ -232,7 +232,13 @@ def pipelined_inference_delay(place: np.ndarray, blocks: Sequence[Block],
 def migration_delay(prev: Optional[np.ndarray], place: np.ndarray,
                     blocks: Sequence[Block], cost: CostModel,
                     net: DeviceNetwork, tau: int) -> float:
-    """Eq. (7): serialized migrations, block footprint at τ-1 (Eq. 2)."""
+    """Eq. (7): serialized migrations, block footprint at τ-1 (Eq. 2).
+
+    With ``CostModel.page_size`` set (paged serving), the head-block
+    footprint rounds the live token extent up to page granularity, so
+    the priced migration bytes track allocated pages — the same unit
+    the engine physically transfers — instead of the worst-case
+    ``max_seq`` reservation."""
     if prev is None:
         return 0.0
     total = 0.0

@@ -267,6 +267,255 @@ def decode_attention_int8_resident(q, k_q8, k_sc, v_q8, v_sc, lengths, rows,
     return out[:, :, 0, :]
 
 
+def _kernel_paged(len_ref, qr_ref, kr_ref, pt_ref, *rest, scale, bk, nk):
+    """Paged wrapper of ``_kernel``: the page table (4th scalar-prefetch
+    ref) is consumed by the kv BlockSpec index maps — the body is the
+    SAME flash body, with the block size equal to the page size and
+    ``k_start = page * page_size`` the logical position (the page map is
+    kept in logical order, so the prefix length mask still skips every
+    dead page)."""
+    _kernel(len_ref, *rest, scale=scale, bk=bk, nk=nk)
+
+
+def _kernel_int8_paged(len_ref, qr_ref, kr_ref, pt_ref, *rest, scale, bk,
+                       nk):
+    _kernel_int8(len_ref, *rest, scale=scale, bk=bk, nk=nk)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged_resident(q, k_pages, v_pages, lengths, page_map,
+                                    rows, kv_rows=None, *,
+                                    interpret: bool = False):
+    """Flash-decode over a PAGED cache: resident head rows × live pages.
+
+    q: (B, H, dh); k_pages/v_pages: (n_pages, KvE, P, dh) — the pooled
+    page store, no batch axis (pages are the allocation unit, any page
+    can serve any slot); lengths: (B,) int32 valid lengths; page_map:
+    (B, np) int32 PHYSICAL page ids in logical order — entries past a
+    slot's live pages may hold any in-range id (callers clamp their -1
+    sentinels to 0): the length mask skips those blocks before their
+    garbage is read.  rows/kv_rows as in
+    :func:`decode_attention_resident`.
+
+    Grid (B, R, np): the kv BlockSpec index maps walk
+    ``(page_map[b, ip], kv_rows[h])`` — block-sparse dispatch in BOTH the
+    head axis (placement) and the sequence axis (paging), so a slot's
+    decode reads exactly its resident heads' live pages and no dense
+    ``max_seq`` extent exists anywhere.  Returns the compacted
+    (B, R, dh) slice in ``rows`` order.
+    """
+    B, H, dh = q.shape
+    n_pages, KvE, P = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    assert H % KvE == 0
+    G = H // KvE
+    if kv_rows is None:
+        kv_rows = rows // G
+    R = rows.shape[0]
+    np_log = page_map.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q[:, :, None, :]                                  # (B,H,1,dh)
+
+    kernel = functools.partial(_kernel_paged, scale=scale, bk=P, nk=np_log)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, R, np_log),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh),
+                         lambda b, h, ip, lens, qr, kr, pt:
+                         (b, qr[h], 0, 0)),
+            pl.BlockSpec((1, 1, P, dh),
+                         lambda b, h, ip, lens, qr, kr, pt:
+                         (pt[b, ip], kr[h], 0, 0)),
+            pl.BlockSpec((1, 1, P, dh),
+                         lambda b, h, ip, lens, qr, kr, pt:
+                         (pt[b, ip], kr[h], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda b, h, ip, lens, qr, kr, pt:
+                               (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R, 1, dh), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), rows.astype(jnp.int32),
+      kv_rows.astype(jnp.int32), page_map.astype(jnp.int32),
+      q4, k_pages, v_pages)
+    return out[:, :, 0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_int8_paged_resident(q, k_q8, k_sc, v_q8, v_sc,
+                                         lengths, page_map, rows,
+                                         kv_rows=None, *,
+                                         interpret: bool = False):
+    """Paged + fused-int8 variant: k_q8/v_q8 (n_pages, KvE, P, dh) int8,
+    k_sc/v_sc (n_pages, KvE, P, 1) f32 per-(token, head) scale pages —
+    scales page exactly like values, so a migrated page carries its own
+    dequant state."""
+    B, H, dh = q.shape
+    n_pages, KvE, P = k_q8.shape[0], k_q8.shape[1], k_q8.shape[2]
+    assert H % KvE == 0
+    G = H // KvE
+    if kv_rows is None:
+        kv_rows = rows // G
+    R = rows.shape[0]
+    np_log = page_map.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q[:, :, None, :]
+
+    kernel = functools.partial(_kernel_int8_paged, scale=scale, bk=P,
+                               nk=np_log)
+    kv_spec = pl.BlockSpec((1, 1, P, dh),
+                           lambda b, h, ip, lens, qr, kr, pt:
+                           (pt[b, ip], kr[h], 0, 0))
+    sc_spec = pl.BlockSpec((1, 1, P, 1),
+                           lambda b, h, ip, lens, qr, kr, pt:
+                           (pt[b, ip], kr[h], 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, R, np_log),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh),
+                         lambda b, h, ip, lens, qr, kr, pt:
+                         (b, qr[h], 0, 0)),
+            kv_spec, sc_spec, kv_spec, sc_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda b, h, ip, lens, qr, kr, pt:
+                               (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R, 1, dh), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), rows.astype(jnp.int32),
+      kv_rows.astype(jnp.int32), page_map.astype(jnp.int32),
+      q4, k_q8, k_sc, v_q8, v_sc)
+    return out[:, :, 0, :]
+
+
+def _kernel_ring(len_ref, qr_ref, kr_ref, q_ref, k_ref, v_ref, pos_ref,
+                 o_ref, m_ref, l_ref, acc_ref, *, scale: float, bk: int,
+                 nk: int, window: int):
+    """Ring-buffer flash decode: softmax is permutation-invariant over
+    the kv axis, so the ring needs NO physical rotation — each block's
+    absolute positions stream in as a VMEM input (the ring's ``pos``
+    array) and validity is decided per column.  Unlike the linear
+    kernels, validity is NOT a block-axis prefix, so every block
+    computes and the mask must also zero ``p`` explicitly: a
+    fully-invalid block leaves ``m`` at NEG_INF and ``exp(s - m)`` would
+    otherwise be exp(0) = 1."""
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    length = len_ref[b]                      # query position + 1
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (1, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pc = pos_ref[0][None, :]                              # (1, bk) abs pos
+    valid = (pc < length) & (pc >= length - window)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention_ring_resident(q, k, v, lengths, slot_pos, rows,
+                                   kv_rows=None, *, window: int,
+                                   bk: int = DEFAULT_BK,
+                                   interpret: bool = False):
+    """Sliding-window (ring cache) flash decode over resident head rows.
+
+    q: (B, H, dh); k, v: (B, KvE, window, dh) ring buffers (slot
+    ``t % window`` holds position t); lengths: (B,) int32 = query
+    position + 1; slot_pos: (window,) int32 the absolute position held by
+    each ring slot (empty slots hold a large negative, so they never pass
+    the window mask); rows/kv_rows: the same scalar-prefetched gather
+    maps as :func:`decode_attention_resident` — the ring closes PR 4's
+    kernel-path hole with the SAME machinery, plus one (1, window)
+    position stream the mask consults instead of a block-prefix length
+    test."""
+    B, H, dh = q.shape
+    KvE, T = k.shape[1], k.shape[2]
+    assert T == window, (T, window)
+    assert H % KvE == 0
+    G = H // KvE
+    if kv_rows is None:
+        kv_rows = rows // G
+    R = rows.shape[0]
+    bk = min(bk, T)
+    assert T % bk == 0, (T, bk)
+    nk = T // bk
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q[:, :, None, :]
+    pos2 = slot_pos.astype(jnp.int32)[None, :]             # (1, window)
+
+    kernel = functools.partial(_kernel_ring, scale=scale, bk=bk, nk=nk,
+                               window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, R, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh),
+                         lambda b, h, ik, lens, qr, kr: (b, qr[h], 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, ik, lens, qr, kr: (b, kr[h], ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b, h, ik, lens, qr, kr: (b, kr[h], ik, 0)),
+            pl.BlockSpec((1, bk),
+                         lambda b, h, ik, lens, qr, kr: (0, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda b, h, ik, lens, qr, kr: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R, 1, dh), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), rows.astype(jnp.int32),
+      kv_rows.astype(jnp.int32), q4, k, v, pos2)
+    return out[:, :, 0, :]
+
+
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
 def decode_attention(q, k, v, lengths, *, bk: int = DEFAULT_BK,
                      interpret: bool = False):

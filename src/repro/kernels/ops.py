@@ -12,8 +12,11 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention import (
     decode_attention as _decode,
+    decode_attention_int8_paged_resident as _decode_i8_paged,
     decode_attention_int8_resident as _decode_i8_res,
+    decode_attention_paged_resident as _decode_paged,
     decode_attention_resident as _decode_res,
+    decode_attention_ring_resident as _decode_ring,
 )
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rwkv6_kernel import rwkv6_chunked as _rwkv6
@@ -70,6 +73,58 @@ def decode_attention_int8_resident_bshd(q, k_q8, k_sc, v_q8, v_sc, lengths,
                        k_sc.transpose(0, 2, 1), v_q8.transpose(0, 2, 1, 3),
                        v_sc.transpose(0, 2, 1), lengths, rows, kv_rows,
                        interpret=interpret)
+    if inv_rows is not None:
+        o = jnp.take(o, inv_rows, axis=1)
+    return o[:, None]
+
+
+def decode_attention_paged_bshd(q, k_pages, v_pages, lengths, page_map,
+                                rows, kv_rows=None, *, inv_rows=None,
+                                interpret: bool | None = None):
+    """Paged decode in model layout: q (B,1,H,dh), page store k/v
+    (n_pages, P, KvE, dh), ``page_map`` (B, np) int32 physical page ids
+    in logical order (callers clamp unmapped -1 entries to 0 — the
+    length mask hides them).  ``rows``/``inv_rows`` as in
+    :func:`decode_attention_resident_bshd`."""
+    interpret = _on_cpu() if interpret is None else interpret
+    o = _decode_paged(q[:, 0], k_pages.transpose(0, 2, 1, 3),
+                      v_pages.transpose(0, 2, 1, 3), lengths, page_map,
+                      rows, kv_rows, interpret=interpret)
+    if inv_rows is not None:
+        o = jnp.take(o, inv_rows, axis=1)
+    return o[:, None]
+
+
+def decode_attention_int8_paged_bshd(q, k_q8, k_sc, v_q8, v_sc, lengths,
+                                     page_map, rows, kv_rows=None, *,
+                                     inv_rows=None,
+                                     interpret: bool | None = None):
+    """int8-KV twin of :func:`decode_attention_paged_bshd`: page store
+    k_q8/v_q8 (n_pages, P, KvE, dh) int8 with per-(token, head) scale
+    pages k_sc/v_sc (n_pages, P, KvE)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    o = _decode_i8_paged(q[:, 0], k_q8.transpose(0, 2, 1, 3),
+                         k_sc.transpose(0, 2, 1)[..., None],
+                         v_q8.transpose(0, 2, 1, 3),
+                         v_sc.transpose(0, 2, 1)[..., None],
+                         lengths, page_map, rows, kv_rows,
+                         interpret=interpret)
+    if inv_rows is not None:
+        o = jnp.take(o, inv_rows, axis=1)
+    return o[:, None]
+
+
+def decode_attention_ring_bshd(q, k, v, lengths, slot_pos, *, window: int,
+                               rows, kv_rows=None, inv_rows=None,
+                               interpret: bool | None = None):
+    """Sliding-window ring-cache decode in model layout: q (B,1,H,dh),
+    ring k/v (B,window,KvE,dh), ``slot_pos`` (window,) the absolute
+    position each ring slot holds — the kernel masks by position instead
+    of rotating the buffer (softmax is permutation-invariant over kv)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    o = _decode_ring(q[:, 0], k.transpose(0, 2, 1, 3),
+                     v.transpose(0, 2, 1, 3), lengths, slot_pos, rows,
+                     kv_rows, window=window, interpret=interpret)
     if inv_rows is not None:
         o = jnp.take(o, inv_rows, axis=1)
     return o[:, None]

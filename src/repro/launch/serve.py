@@ -50,6 +50,13 @@ def main(argv=None):
                     help="controller placement search: the PR-3 rescoring "
                          "path or the bottleneck-targeted search "
                          "(pipeline-k > 1)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: pooled page store + per-slot "
+                         "page tables, chunked prefill (continuous "
+                         "engine only); streams must match the dense "
+                         "engine at the same seed")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (--paged)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -57,10 +64,19 @@ def main(argv=None):
         cfg = reduced_for_cpu(cfg)
     if args.kv_quant:
         cfg = cfg.with_overrides(kv_quant=True)
-    eng = make_engine(cfg, mode=args.engine, n_slots=args.slots,
-                      max_seq=args.prompt_len + args.tokens + 8,
+    kw = {}
+    mode = args.engine
+    if args.paged:
+        # pages divide max_seq; the paged path is continuous-engine only
+        kw.update(paged=True, page_size=args.page_size)
+        mode = "continuous"
+    max_seq = args.prompt_len + args.tokens + 8
+    if args.paged and max_seq % args.page_size:
+        max_seq += args.page_size - max_seq % args.page_size
+    eng = make_engine(cfg, mode=mode, n_slots=args.slots,
+                      max_seq=max_seq,
                       lam=args.lam, use_kernel=args.use_kernel,
-                      pipeline_k=args.pipeline_k, search=args.search)
+                      pipeline_k=args.pipeline_k, search=args.search, **kw)
     print(f"[serve] engine: {type(eng).__name__}")
     if args.straggler >= 0:
         eng.net.inject_straggler(args.straggler, slowdown=20.0)

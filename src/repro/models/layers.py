@@ -338,6 +338,17 @@ def _decode_kernel_ok(T: int) -> bool:
     return T % min(DEFAULT_BK, T) == 0
 
 
+def _q8(t):
+    """Per-(token, head) int8 quantization over dh: (values int8, scales
+    f32) — one definition shared by the dense and paged int8 cache
+    branches so their stored values cannot diverge."""
+    sc = jnp.maximum(jnp.max(jnp.abs(t.astype(jnp.float32)),
+                             axis=-1), 1e-8) / 127.0
+    qq = jnp.clip(jnp.round(t.astype(jnp.float32) / sc[..., None]),
+                  -127, 127).astype(jnp.int8)
+    return qq, sc.astype(jnp.float32)
+
+
 def _project_out(p: dict, out, part: Partitioner, *, gate=None):
     """Shared attention output tail: wo projection (plus the VLM
     cross-attention gate when given), constrained to the residual layout
@@ -352,7 +363,7 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
                          positions, part: Partitioner, *,
                          cache=None, cache_pos=None, window: int = 0,
                          use_kernel: bool = False, head_rows=None,
-                         head_inv=None):
+                         head_inv=None, page_map=None, write_valid=None):
     """Causal self-attention with optional KV cache.
 
     cache: dict {"k","v"[, "pos"]} of (B, cache_len, KvE, dh) buffers.
@@ -360,6 +371,13 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
       - ring cache (sliding window, cache_len == window, decode S=1): slot
         ``cache_pos % window``; "pos" (window,) holds absolute positions
         (init to a large negative so empty slots never pass the mask).
+      - paged cache (``page_map`` is not None): cache buffers are pooled
+        pages (n_pages, P, KvE, dh) shared by all slots; ``page_map``
+        (B, np) int32 maps row b's logical page i to a physical page id
+        (-1 = unmapped: writes there DROP, reads clamp to page 0 and are
+        hidden by the causal mask).  ``write_valid`` (B, S) bool masks
+        which of this call's tokens actually store K/V (chunked prefill
+        tails) — attention itself is masked by positions as usual.
     cache_pos: absolute position of the first query token — a scalar int32,
       or a (B,) int32 vector for slot-level continuous batching (linear
       cache, S == 1 only): row b writes its new K/V at its own position
@@ -388,6 +406,79 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
         return attention_scores(q, kk, vv, mask, part)
 
     new_cache = None
+    if cache is not None and page_map is not None:
+        # ---- paged cache: pooled pages + per-row page table -----------
+        n_pages, P = cache["k"].shape[0], cache["k"].shape[1]
+        np_log = page_map.shape[1]
+        Tmax = np_log * P
+        pos32 = positions.astype(jnp.int32)                       # (B, S)
+        lpage = jnp.clip(pos32 // P, 0, np_log - 1)
+        phys = jnp.take_along_axis(page_map, lpage, axis=1)       # (B, S)
+        # unmapped/invalid writes go to a POSITIVE out-of-bounds index so
+        # mode="drop" drops them (-1 would wrap to the last page slot)
+        oob = jnp.int32(n_pages * P)
+        w_idx = jnp.where(phys >= 0, phys * P + pos32 % P, oob)
+        if write_valid is not None:
+            w_idx = jnp.where(write_valid, w_idx, oob)
+        w_flat = w_idx.reshape(B * S)
+        gmap = jnp.maximum(page_map, 0)                           # (B, np)
+        g_idx = (gmap[:, :, None] * P
+                 + jnp.arange(P, dtype=jnp.int32)[None, None, :]
+                 ).reshape(B, Tmax)
+        # pages sit in the table in LOGICAL order, so the gathered view
+        # is position-ordered and the standard causal mask applies
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(Tmax, dtype=jnp.int32)[None, :], (B, Tmax))
+
+        def scatter(buf, new):
+            flat = buf.reshape((n_pages * P,) + buf.shape[2:])
+            flat = flat.at[w_flat].set(
+                new.reshape((B * S,) + new.shape[2:]), mode="drop")
+            return flat.reshape(buf.shape)
+
+        def gather(buf):
+            flat = buf.reshape((n_pages * P,) + buf.shape[2:])
+            return jnp.take(flat, g_idx, axis=0)          # (B, Tmax, ...)
+
+        rows_m = inv = None
+        if use_kernel and S == 1 and cache_pos is not None:
+            rows_m, inv = _head_rows_or_identity(head_rows, head_inv,
+                                                 q.shape[2])
+        if "k_sc" in cache:
+            kq, ksc = _q8(k)
+            vq, vsc = _q8(v)
+            ck, cv = scatter(cache["k"], kq), scatter(cache["v"], vq)
+            cks = scatter(cache["k_sc"], ksc)
+            cvs = scatter(cache["v_sc"], vsc)
+            ck = part.constrain(ck, (None, None, "kv_heads", None))
+            cv = part.constrain(cv, (None, None, "kv_heads", None))
+            new_cache = dict(cache, k=ck, v=cv, k_sc=cks, v_sc=cvs)
+            if rows_m is not None:
+                from repro.kernels import ops
+                out = ops.decode_attention_int8_paged_bshd(
+                    q, ck, cks, cv, cvs, _decode_lengths(cache_pos, B),
+                    gmap, rows_m, inv_rows=inv)
+                return _project_out(p, out, part), new_cache
+            kd = (gather(ck).astype(jnp.float32)
+                  * gather(cks)[..., None]).astype(x.dtype)
+            vd = (gather(cv).astype(jnp.float32)
+                  * gather(cvs)[..., None]).astype(x.dtype)
+            mask = causal_mask(positions, kv_pos, 0)
+            out = attend(kd, vd, kv_pos, mask)
+            return _project_out(p, out, part), new_cache
+        ck, cv = scatter(cache["k"], k), scatter(cache["v"], v)
+        ck = part.constrain(ck, (None, None, "kv_heads", None))
+        cv = part.constrain(cv, (None, None, "kv_heads", None))
+        new_cache = dict(cache, k=ck, v=cv)
+        if rows_m is not None:
+            from repro.kernels import ops
+            out = ops.decode_attention_paged_bshd(
+                q, ck, cv, _decode_lengths(cache_pos, B), gmap, rows_m,
+                inv_rows=inv)
+            return _project_out(p, out, part), new_cache
+        mask = causal_mask(positions, kv_pos, 0)
+        out = attend(gather(ck), gather(cv), kv_pos, mask)
+        return _project_out(p, out, part), new_cache
     if cache is not None:
         cache_len = cache["k"].shape[1]
         ring = window > 0 and cache_len == window
@@ -426,14 +517,8 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
         elif "k_sc" in cache:
             # int8 KV cache: quantize the new tokens per (token, head) over
             # dh, update values+scales, dequantize for the attention read
-            def q8(t):
-                sc = jnp.maximum(jnp.max(jnp.abs(t.astype(jnp.float32)),
-                                         axis=-1), 1e-8) / 127.0
-                qq = jnp.clip(jnp.round(t.astype(jnp.float32) / sc[..., None]),
-                              -127, 127).astype(jnp.int8)
-                return qq, sc.astype(jnp.float32)
-            kq, ksc = q8(k)
-            vq, vsc = q8(v)
+            kq, ksc = _q8(k)
+            vq, vsc = _q8(v)
             if getattr(cache_pos, "ndim", 0) == 1:
                 # per-slot write (continuous batching, S == 1): row b's
                 # quantized K/V and scales land at its own position, same
@@ -496,6 +581,17 @@ def self_attention_block(cfg: ModelConfig, p: dict, hd: HeadDims, x,
         new_cache = dict(cache, k=ck, v=cv)
         if slot_pos is not None:
             new_cache["pos"] = slot_pos
+        if use_kernel and S == 1 and ring and _decode_kernel_ok(window):
+            # ring-cache decode hot path: same resident gather maps, the
+            # window mask consults the ring's position stream instead of
+            # rotating the buffer (PR 4's logged kernel-path hole)
+            from repro.kernels import ops
+            rows, inv = _head_rows_or_identity(head_rows, head_inv,
+                                               q.shape[2])
+            out = ops.decode_attention_ring_bshd(
+                q, ck, cv, _decode_lengths(cache_pos, B), slot_pos,
+                window=window, rows=rows, inv_rows=inv)
+            return _project_out(p, out, part), new_cache
         if use_kernel and S == 1 and window == 0 and slot_pos is None \
                 and _decode_kernel_ok(cache_len):
             # linear-cache decode hot path: the Pallas flash-decode kernel

@@ -119,7 +119,8 @@ class TransformerLM:
 
     # ----------------------------------------------------------------- layer
     def _layer(self, p: dict, x, positions, cache, cache_pos,
-               head_rows=None, head_inv=None):
+               head_rows=None, head_inv=None, page_map=None,
+               write_valid=None):
         cfg, part = self.cfg, self.part
         h = L.apply_norm(cfg, p, "ln1", x)
         # explicit SP->TP boundary ON THE BF16 TENSOR: norms run in the
@@ -132,7 +133,7 @@ class TransformerLM:
             cfg, p["attn"], self.hd, h, positions, part,
             cache=cache, cache_pos=cache_pos, window=self.window,
             use_kernel=self.use_kernel, head_rows=head_rows,
-            head_inv=head_inv)
+            head_inv=head_inv, page_map=page_map, write_valid=write_valid)
         x = x + attn_out
         h = L.apply_norm(cfg, p, "ln2", x)
         h = part.constrain(h, ("batch", "seq", "d_model"))
@@ -177,13 +178,16 @@ class TransformerLM:
     # --------------------------------------------------------------- forward
     def _run_layers(self, params, x, positions, cache, cache_pos,
                     img_kv=None, img_mask=None, head_rows=None,
-                    head_inv=None):
+                    head_inv=None, page_map=None, write_valid=None):
         """Scan over layers. cache: stacked {"k","v"[,"pos"]} or None.
         ``head_rows``/``head_inv``: stacked (n_layers, Hp) kernel gather/
         scatter maps scanned alongside the cache, so layer l's decode
         dispatch reads layer l's resident-slice row map (dense archs only
         — VLM caches are (G, 4, ...) stacks whose migrations are
-        all-layers-equal, so identity maps stay correct there)."""
+        all-layers-equal, so identity maps stay correct there).
+        ``page_map``/``write_valid`` (paged caches) are CLOSURES over the
+        scan, not scanned: one page table serves every layer — the layer
+        axis lives in the page store, not the table."""
         remat_policy = REMAT_POLICIES[self.remat]
 
         def body(carry, xs):
@@ -201,7 +205,9 @@ class TransformerLM:
                 return (x, aux + a), None
             layer_p, layer_cache, rows, inv = xs
             x, new_cache, a = self._layer(layer_p, x, positions, layer_cache,
-                                          cache_pos, rows, inv)
+                                          cache_pos, rows, inv,
+                                          page_map=page_map,
+                                          write_valid=write_valid)
             return (x, aux + a), new_cache
 
         if self.remat != "none":
@@ -344,15 +350,22 @@ class TransformerLM:
             positions = pos[:, None].astype(jnp.int32)
         else:
             positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        page_map = state.get("page_map")
         x, new_cache, _ = self._run_layers(
             params, x, positions, state["cache"], pos,
             img_kv=state.get("img_kv"), img_mask=state.get("img_mask"),
-            head_rows=state.get("head_rows"), head_inv=state.get("head_inv"))
+            head_rows=state.get("head_rows"), head_inv=state.get("head_inv"),
+            page_map=page_map)
         x = L.apply_norm(cfg, params, "ln_f", x)
         logits = L.unembed(cfg, params, x, part)
         if per_slot:
-            # clamp retired slots at the cache edge (their writes drop)
-            T = state["cache"]["k"].shape[-3]
+            # clamp retired slots at the cache edge (their writes drop);
+            # the paged extent is the page table's logical span, not a
+            # dense cache axis
+            if page_map is not None:
+                T = page_map.shape[1] * state["cache"]["k"].shape[2]
+            else:
+                T = state["cache"]["k"].shape[-3]
             new_pos = jnp.minimum(pos + 1, jnp.int32(T))
         else:
             new_pos = pos + 1
@@ -428,3 +441,89 @@ class TransformerLM:
                 jnp.asarray(sub["img_mask"], state["img_mask"].dtype),
                 (slot, jnp.int32(0)))
         return out
+
+    # ------------------------------------------------------- paged caching
+    def init_paged_cache(self, n_pages: int, page_size: int,
+                         dtype=None) -> dict:
+        """Pooled page store: stacked (L, n_pages, P, KvE, dh) — the
+        batch × seq extent of the dense cache is replaced by a flat page
+        axis shared by every slot, so resident bytes follow ALLOCATED
+        pages, not ``n_slots * max_seq`` worst case.  int8-KV configs
+        page their per-(token, head) scales alongside the values."""
+        cfg = self.cfg
+        if self.window:
+            raise NotImplementedError(
+                "paged caches are linear; sliding-window archs keep the "
+                "ring cache")
+        if self.is_vlm:
+            raise NotImplementedError(
+                "paged caches do not yet carry the VLM image K/V")
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        lead = (cfg.n_layers,)
+        shape = lead + (n_pages, page_size, self.hd.KvE, self.hd.dh)
+        if cfg.kv_quant:
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_sc": jnp.zeros(
+                        lead + (n_pages, page_size, self.hd.KvE),
+                        jnp.float32),
+                    "v_sc": jnp.zeros(
+                        lead + (n_pages, page_size, self.hd.KvE),
+                        jnp.float32)}
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    def init_paged_state(self, params, batch: int, n_pages: int,
+                         page_size: int, pages_per_slot: int,
+                         dtype=None) -> Dict[str, Any]:
+        """Per-slot paged decode state: the page store, per-row positions,
+        and the (batch, pages_per_slot) page table — all ``-1``
+        (unmapped) until the engine mounts an allocation."""
+        return {"cache": self.init_paged_cache(n_pages, page_size, dtype),
+                "pos": jnp.zeros((batch,), jnp.int32),
+                "page_map": jnp.full((batch, pages_per_slot), -1,
+                                     jnp.int32)}
+
+    def prefill_paged(self, params, state, tokens, row, start, length):
+        """ONE fixed-shape chunk of a paged prefill: ``tokens`` (1, C)
+        holds chunk tokens right-padded to the chunk size, ``row`` the
+        slot row, ``start`` the chunk's absolute start position and
+        ``length`` its valid token count — ALL traced scalars, so every
+        chunk of every prompt in every slot runs the same single
+        lowering (no bucket ladder).  K/V land in the slot's mapped pages
+        (invalid tail writes drop); returns the logits of the chunk's
+        last VALID token (meaningful on the final chunk) and the state
+        with ``pos[row] = start + length``."""
+        cfg, part = self.cfg, self.part
+        B, C = tokens.shape
+        row = jnp.asarray(row, jnp.int32)
+        start = jnp.asarray(start, jnp.int32)
+        length = jnp.asarray(length, jnp.int32)
+        x = L.embed(cfg, params, tokens, part)
+        positions = (start + jnp.arange(C, dtype=jnp.int32))[None, :]
+        valid = (jnp.arange(C, dtype=jnp.int32) < length)[None, :]
+        page_row = jax.lax.dynamic_slice_in_dim(
+            state["page_map"], row, 1, axis=0)            # (1, np)
+        x, new_cache, _ = self._run_layers(
+            params, x, positions, state["cache"], None,
+            page_map=page_row, write_valid=valid)
+        x = L.apply_norm(cfg, params, "ln_f", x)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(length - 1, 0)[None, None, None], axis=1)
+        logits = L.unembed(cfg, params, last, part)
+        pos = jax.lax.dynamic_update_slice(
+            state["pos"], (start + length)[None], (row,))
+        return logits[:, 0], dict(state, cache=new_cache, pos=pos)
+
+    def mount_slot_pages(self, state, row, pages, pos):
+        """Write slot ``row``'s page-table row (+ position) into a paged
+        decode state — the paged analog of :meth:`insert_slot`, used at
+        admission, page-boundary extension, and retire (all ``-1`` +
+        pos 0: the row's writes drop and its reads are masked).  ``row``
+        stays a traced scalar so ONE lowering serves every slot."""
+        row = jnp.asarray(row, jnp.int32)
+        pm = jax.lax.dynamic_update_slice(
+            state["page_map"], jnp.asarray(pages, jnp.int32)[None, :],
+            (row, jnp.int32(0)))
+        ps = jax.lax.dynamic_update_slice(
+            state["pos"], jnp.asarray(pos, jnp.int32)[None], (row,))
+        return dict(state, page_map=pm, pos=ps)

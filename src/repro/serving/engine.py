@@ -117,7 +117,8 @@ class _EngineBase:
                  net: Optional[DeviceNetwork] = None, cost_cfg=None,
                  part=None, tp: int = 1, greedy: bool = True,
                  layer_mode: str = "graph", pipeline_k: int = 1,
-                 use_kernel: bool = False, search: str = "rescoring"):
+                 use_kernel: bool = False, search: str = "rescoring",
+                 cost_page_size: int = 0):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -157,7 +158,8 @@ class _EngineBase:
         self.cost = CostModel(d_model=ccfg.d_model, n_heads=max(cfg.n_heads, 1),
                               L0=8, n_layers=max(n_l, 1), lam=lam,
                               compute_mode="incremental",
-                              layer_mode=layer_mode)
+                              layer_mode=layer_mode,
+                              page_size=max(0, int(cost_page_size)))
         # KV-group size: GQA stacks migrate whole groups (query heads move
         # with their shared KV head), so the controller emits
         # group-consistent permutations — the old silent skip is gone.
@@ -346,10 +348,37 @@ class _EngineBase:
         self._log_interval(plan, applied, reason)
         return state
 
+    # ------------------------------------------------- migration pricing
+    def _live_cache_tokens(self) -> int:
+        """KV tokens a migration actually moves, summed over slots: dense
+        engines hold (and must copy) the full reserved
+        ``n_slots × max_seq`` extent per kv row.  The paged engine
+        overrides this with its allocated page count — the measurable
+        difference behind pages-as-the-migration-unit."""
+        return self.n_slots * self.max_seq
+
+    def _migration_bytes(self, pairs) -> int:
+        """Bytes the plan's head migrations move through the cache: one
+        k+v row over the live token extent per distinct migrated
+        (layer, kv group) — ×rep replicas, +f32 scales for int8 KV."""
+        hd = getattr(self.model, "hd", None)
+        if hd is None or not hd.Hp or not pairs:
+            return 0
+        G = hd.Hp // hd.Kp if hd.Kp else 1
+        kv_moves = {(l, h // G) for (l, h, _s, _d) in pairs}
+        tokens = self._live_cache_tokens()
+        if self.cfg.kv_quant:
+            per_row = tokens * 2 * (hd.dh + 4)   # int8 k+v + f32 scales
+        else:
+            per_row = tokens * 2 * hd.dh * \
+                jnp.dtype(self.cfg.dtype).itemsize
+        return int(len(kv_moves) * hd.rep * per_row)
+
     def _log_interval(self, plan, applied: bool, reason: Optional[str]):
         self.migration_log.append({
             "step": self.decode_steps,
             "n_migrations": len(plan["migrations"]),
+            "mig_bytes": self._migration_bytes(plan["migrations"]),
             "d_mig_est": plan["d_mig_est"],
             "d_pipe_est": plan.get("d_pipe_est"),
             "applied": applied, "reason": reason})
@@ -373,14 +402,36 @@ class ServingEngine(_EngineBase):
     VLM configs are slot-wired: ``submit`` takes per-request image patch
     embeddings, prefill projects them into the request's static image K/V,
     and ``insert_slot`` splices img_kv/img_mask rows alongside the cache.
+
+    ``paged=True`` swaps the dense per-slot cache for the paged KV
+    subsystem (serving.paging): a pooled page store per decode group, a
+    per-slot page table, pages allocated as decode advances and freed on
+    retire, and CHUNKED prefill through one fixed-shape jit (the bucket
+    ladder disappears — ``prefill_chunk`` tokens per chunk, traced
+    row/start/length).  ``kv_pages`` bounds the pool (the per-device
+    memory budget knob: a smaller pool admits the same slots because
+    they only hold live pages); migrations move only live pages and the
+    controller prices cache memory page-granularly
+    (``CostModel.page_size``).
     """
 
     def __init__(self, cfg: ModelConfig, *,
                  buckets: Optional[Sequence[int]] = None,
-                 img_tokens: int = 16, **kw):
+                 img_tokens: int = 16, paged: bool = False,
+                 page_size: int = 64, kv_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None, **kw):
         reason = supports_continuous(cfg)   # cheap cfg-only check BEFORE
         if reason is not None:              # params/controller are built
             raise UnsupportedArchError(reason + "; use WaveServingEngine")
+        self.paged = bool(paged)
+        if self.paged:
+            if cfg.family == "vlm":
+                raise UnsupportedArchError(
+                    "paged KV does not yet carry the VLM image K/V; "
+                    "use paged=False")
+            # the controller prices cache memory (and so migration bytes)
+            # at page granularity — what the allocator actually hands out
+            kw.setdefault("cost_page_size", page_size)
         super().__init__(cfg, **kw)
         assert hasattr(self.model, "prefill_bucketed"), type(self.model)
         if self.n_slots % self.pipeline_k:
@@ -394,6 +445,25 @@ class ServingEngine(_EngineBase):
             else default_buckets(self.max_seq)
         self.is_vlm = cfg.family == "vlm"
         self.img_tokens = img_tokens
+        if self.paged:
+            if self.max_seq % page_size:
+                raise ValueError(f"max_seq={self.max_seq} must be a "
+                                 f"multiple of page_size={page_size}")
+            from repro.serving.paging import PagedKVAllocator
+            self.page_size = int(page_size)
+            self.pages_per_slot = self.max_seq // self.page_size
+            # pool size per decode group: default = full dense reservation
+            # (paged is then a pure refactor); a SMALLER pool is the
+            # memory-budget knob — the same device bytes admit more slots
+            # because slots only hold their live pages
+            self.kv_pages = int(kv_pages) if kv_pages is not None \
+                else self.rows_per_group * self.pages_per_slot
+            self.allocators = [
+                PagedKVAllocator(self.kv_pages, self.page_size,
+                                 self.rows_per_group, self.pages_per_slot)
+                for _ in range(self.pipeline_k)]
+            # one fixed chunk shape = ONE prefill lowering, period
+            self.prefill_chunk = int(prefill_chunk or self.page_size)
         # kernelized decode: per-layer gather maps (physical q-head rows in
         # slot-grouped placement order) threaded through the decode state.
         # VLM caches are (G, 4, ...) stacks migrated all-layers-equal, so
@@ -424,6 +494,14 @@ class ServingEngine(_EngineBase):
                                              donate_argnums=(1,))
         self._insert_jit = jax.jit(self.model.insert_slot,
                                    donate_argnums=(0,))
+        if self.paged:
+            # chunked prefill + page-table mount: row/start/length are
+            # traced scalars, so each is ONE lowering for all slots,
+            # chunks, and prompt lengths (the HLO audit gates this)
+            self._paged_prefill_jit = jax.jit(self.model.prefill_paged,
+                                              donate_argnums=(1,))
+            self._mount_jit = jax.jit(self.model.mount_slot_pages,
+                                      donate_argnums=(0,))
         # observability: scheduler decisions + compile boundedness (bounded,
         # like sample_key_log: a serving loop must not grow per request)
         self.admission_log: Deque[dict] = \
@@ -434,6 +512,10 @@ class ServingEngine(_EngineBase):
     def _fresh_state(self, batch: int, max_seq: Optional[int] = None,
                      img: Optional[np.ndarray] = None,
                      img_mask: Optional[np.ndarray] = None):
+        if self.paged:
+            return self.model.init_paged_state(
+                self.params, batch, self.kv_pages, self.page_size,
+                self.pages_per_slot)
         kw: Dict[str, Any] = {"per_slot": True}
         if self.is_vlm:
             # fixed-size image K/V buffer; empty rows are fully masked and
@@ -531,6 +613,16 @@ class ServingEngine(_EngineBase):
         self.finished.append(r)
         self.slots[slot] = None
         self._next[slot] = 0
+        if self.paged:
+            # free the slot's pages and unmount its table row: the row's
+            # future (clamped) writes drop and its reads are masked, so
+            # recycled pages cannot be corrupted by a retired slot
+            g, row = self._group_of(slot)
+            self.allocators[g].release(row)
+            self.states[g] = self._mount_jit(
+                self.states[g], jnp.int32(row),
+                jnp.asarray(self.allocators[g].page_map_row(row)),
+                jnp.int32(0))
 
     def _finish_check(self, slot: int):
         r = self.slots[slot]
@@ -547,6 +639,10 @@ class ServingEngine(_EngineBase):
                       if self.slots[i] is None), None)
             if s is None:
                 return
+            if self.paged:
+                if not self._admit_paged(s):
+                    return      # head-of-line: wait for pages to free
+                continue
             r = self.queue.pop(0)
             L0 = len(r.prompt)
             Lb = self._bucket(L0)
@@ -574,6 +670,74 @@ class ServingEngine(_EngineBase):
                                        "rid": r.rid, "bucket": Lb})
             self._finish_check(s)
 
+    def _admit_paged(self, s: int) -> bool:
+        """Admit the queue head into free slot ``s``: reserve its
+        worst-case page footprint (prompt + its own decode budget — so
+        decode-time extension can never exhaust the pool mid-stream),
+        allocate the prompt's pages, mount the table row, and run the
+        prompt through the SINGLE fixed-shape chunked-prefill jit.
+        Returns False when the pool cannot reserve yet (head-of-line
+        wait: the request admits once running slots retire)."""
+        r = self.queue[0]
+        L0 = len(r.prompt)
+        g, row = self._group_of(s)
+        alloc = self.allocators[g]
+        horizon = min(L0 + r.max_new_tokens + 1, self.max_seq)
+        if not alloc.can_admit(L0, horizon):
+            return False
+        self.queue.pop(0)
+        pages = alloc.admit(row, n_tokens=L0, horizon=horizon)
+        self.states[g] = self._mount_jit(
+            self.states[g], jnp.int32(row),
+            jnp.asarray(alloc.page_map_row(row)), jnp.int32(0))
+        C = self.prefill_chunk
+        logits = None
+        for c0 in range(0, max(L0, 1), C):
+            n = min(C, L0 - c0)
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :n] = r.prompt[c0:c0 + n]
+            logits, self.states[g] = self._paged_prefill_jit(
+                self.params, self.states[g], jnp.asarray(toks),
+                jnp.int32(row), jnp.int32(c0), jnp.int32(n))
+        self.prefill_buckets_used.add(C)
+        r.t_first = time.monotonic()
+        self.slots[s] = r
+        # rpr: ignore[RPR004] -- the admission-time sample IS the
+        # scheduler's sync point: the first token must reach the host
+        # to seed _next before the slot can decode
+        tok = int(self._sample(logits)[0])
+        self._next[s] = tok
+        r.out_tokens.append(tok)
+        self.admission_log.append({"step": self.decode_steps, "slot": s,
+                                   "rid": r.rid, "bucket": C,
+                                   "pages": len(pages)})
+        self._finish_check(s)
+        return True
+
+    def _ensure_pages(self, g: int, active: List[int], lo: int):
+        """Lazy page growth: before group ``g`` decodes, any slot whose
+        next write position crosses into an unallocated page draws one
+        from its admission reservation and remounts its table row —
+        live bytes track actual depth, not the reservation."""
+        alloc = self.allocators[g]
+        for s in active:
+            row = s - lo
+            r = self.slots[s]
+            write_pos = len(r.prompt) + len(r.out_tokens) - 1
+            if write_pos >= alloc.pages_for(row) * self.page_size:
+                alloc.extend(row, write_pos + 1)
+                self.states[g] = self._mount_jit(
+                    self.states[g], jnp.int32(row),
+                    jnp.asarray(alloc.page_map_row(row)),
+                    jnp.int32(write_pos))
+
+    def _live_cache_tokens(self) -> int:
+        """Paged engines move only allocated pages (page-rounded live
+        tokens, summed over groups) when a head's cache migrates."""
+        if not self.paged:
+            return super()._live_cache_tokens()
+        return sum(a.live_pages for a in self.allocators) * self.page_size
+
     def _active(self) -> List[int]:
         return [s for s in range(self.n_slots) if self.slots[s] is not None]
 
@@ -583,10 +747,16 @@ class ServingEngine(_EngineBase):
                 if self.slots[s] is not None]
 
     def _occupancy(self) -> float:
-        """Mean tokens resident per active slot (prompt + generated)."""
+        """Mean tokens resident per active slot (prompt + generated).
+        Paged engines report page-rounded ALLOCATED tokens — the τ anchor
+        then prices exactly the memory the allocator handed out."""
         act = self._active()
         if not act:
             return 0.0
+        if self.paged:
+            return float(np.mean(
+                [self.allocators[self._group_of(s)[0]].pages_for(
+                    self._group_of(s)[1]) * self.page_size for s in act]))
         return float(np.mean([len(self.slots[s].prompt)
                               + len(self.slots[s].out_tokens) for s in act]))
 
@@ -606,6 +776,8 @@ class ServingEngine(_EngineBase):
         lo = g * self.rows_per_group
         active = self._group_active(g)
         if active:
+            if self.paged:
+                self._ensure_pages(g, active, lo)
             t0 = time.monotonic()
             nxt = self._next[lo:lo + self.rows_per_group]
             logits, self.states[g] = self._decode_jit(
