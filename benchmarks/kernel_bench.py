@@ -148,10 +148,81 @@ def bench_kernel_decode(B=4, H=8, KvE=4, T=512, dh=32, bk=128):
             f"x_padded={us_pad / us_res:.2f}")
 
 
+def bench_kernel_decode_paged(B=4, H=8, KvE=4, T=512, dh=32, P=64,
+                              live_tokens=192):
+    """Paged block-sparse dispatch vs the dense max_seq extent (PR-7
+    kernels, interpret mode).  Dense: the resident kernel walks every
+    T/bk KV block of the reserved extent; paged: the paged kernel's grid
+    is ``ceil(live/P)`` live pages per slot — the structural claim is the
+    grid/DMA ratio, the wall ratio (``x_padded``, wall-tolerance-gated)
+    tracks it on CPU."""
+    from repro.kernels.decode_attention import (
+        decode_attention_int8_paged_resident, decode_attention_paged_resident,
+        decode_attention_resident)
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KvE, T, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KvE, T, dh), jnp.float32)
+    lens = jnp.full((B,), live_tokens, jnp.int32)
+    rows_all = jnp.arange(H, dtype=jnp.int32)
+
+    # pooled page store: slot b's logical page ip lives at physical page
+    # b·np_live + ip (a convenient dense packing; any id layout works)
+    np_total, np_live = T // P, -(-live_tokens // P)
+    k_pages = k.reshape(B, KvE, np_total, P, dh)[:, :, :np_live] \
+        .transpose(0, 2, 1, 3, 4).reshape(B * np_live, KvE, P, dh)
+    v_pages = v.reshape(B, KvE, np_total, P, dh)[:, :, :np_live] \
+        .transpose(0, 2, 1, 3, 4).reshape(B * np_live, KvE, P, dh)
+    page_map = (jnp.arange(B)[:, None] * np_live
+                + jnp.arange(np_live)[None, :]).astype(jnp.int32)
+
+    def dense_pass():
+        return decode_attention_resident(q, k, v, lens, rows_all, bk=P,
+                                         interpret=True)
+
+    def paged_pass():
+        return decode_attention_paged_resident(q, k_pages, v_pages, lens,
+                                               page_map, rows_all,
+                                               interpret=True)
+
+    us_dense = _time(dense_pass)
+    us_paged = _time(paged_pass)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    err = float(jnp.abs(paged_pass() - want).max())
+    # int8 page store: per-(token, head) scales page with their values
+    amax = jnp.max(jnp.abs(k_pages), axis=-1, keepdims=True)
+    k_sc = jnp.maximum(amax / 127.0, 1e-8)
+    k_q8 = jnp.clip(jnp.round(k_pages / k_sc), -127, 127).astype(jnp.int8)
+    amax = jnp.max(jnp.abs(v_pages), axis=-1, keepdims=True)
+    v_sc = jnp.maximum(amax / 127.0, 1e-8)
+    v_q8 = jnp.clip(jnp.round(v_pages / v_sc), -127, 127).astype(jnp.int8)
+
+    def paged_i8_pass():
+        return decode_attention_int8_paged_resident(
+            q, k_q8, k_sc[..., 0][..., None], v_q8, v_sc[..., 0][..., None],
+            lens, page_map, rows_all, interpret=True)
+
+    us_i8 = _time(paged_i8_pass)
+    err_i8 = float(jnp.abs(paged_i8_pass() - want).max())
+    blocks_dense = B * H * np_total
+    blocks_paged = B * H * np_live
+    return [
+        ("kernel_decode/paged_dense_extent", us_dense,
+         f"kv_blocks={blocks_dense}"),
+        ("kernel_decode/paged_resident_live", us_paged,
+         f"allclose_err={err:.1e};kv_blocks={blocks_paged};"
+         f"x_padded={us_dense / us_paged:.2f}"),
+        ("kernel_decode/paged_resident_int8", us_i8,
+         f"allclose_err={err_i8:.1e};kv_blocks={blocks_paged}"),
+    ]
+
+
 def kernel_decode_rows():
     us_pad, us_res, d_pad, d_res = bench_kernel_decode()
     yield ("kernel_decode/padded_global_H", us_pad, d_pad)
     yield ("kernel_decode/resident_slice", us_res, d_res)
+    yield from bench_kernel_decode_paged()
 
 
 def rows():

@@ -119,6 +119,27 @@ def markdown_table(rows: List[dict]) -> str:
     return hdr + body
 
 
+def paged_kernel_rows():
+    """Analytic HBM rooflines for the paged decode-attention kernel —
+    deterministic (no dry-run artifacts, no wall clock), so the derived
+    ``x_`` ratios are strict-gated by --check.  Decode attention is
+    memory-bound: step time = KV bytes read / HBM_BW.  The dense kernel
+    reads the reserved max_seq extent; the paged kernel reads only live
+    pages (live tokens rounded up to the page size), so the ratio is
+    extent / page-rounded-live — the PR-7 claim, priced at the roofline."""
+    B, KvE, dh, P = 8, 8, 128, 64          # llama-70b-ish decode shapes
+    bytes_per_tok = 2 * KvE * dh * 2       # K+V, bf16
+    for max_seq, live in ((8192, 1500), (8192, 4096)):
+        dense_us = B * max_seq * bytes_per_tok / HBM_BW * 1e6
+        paged_tok = -(-live // P) * P
+        paged_us = B * paged_tok * bytes_per_tok / HBM_BW * 1e6
+        frac = live / paged_tok
+        yield (f"roofline/paged_decode/extent{max_seq}_live{live}",
+               paged_us,
+               f"x_dense_extent={dense_us / paged_us:.3f};"
+               f"page_util={frac:.3f};dense_us={dense_us:.1f}")
+
+
 def rows():
     table = load_all()
     for r in table:
@@ -126,6 +147,7 @@ def rows():
         yield (f"roofline/{r['arch']}/{r['shape']}", step_bound * 1e6,
                f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
                f"useful={r['useful_ratio']:.2f}")
+    yield from paged_kernel_rows()
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ MODULES = [
     ("pipeline_search", "benchmarks.pipeline_search"),  # bottleneck search
     ("kernels", "benchmarks.kernel_bench"),             # per-kernel
     ("kernel_decode", "benchmarks.kernel_decode"),      # resident vs padded
+    ("moe_serving", "benchmarks.moe_serving"),          # expert-aware place
     ("roofline", "benchmarks.roofline"),                # deliverable (g)
 ]
 

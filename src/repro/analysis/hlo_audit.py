@@ -104,6 +104,34 @@ def build_paged_audit_setup() -> dict:
     return setup
 
 
+def build_moe_audit_setup() -> dict:
+    """MoE twin of :func:`build_audit_setup`: a reduced mixtral (4 experts,
+    top-2, physical owner/share expert layout installed by the engine) so
+    the expert decode path — router, one-hot physical combine, expert-load
+    EWMA — sits under the same donation/copy/lowering budgets as the dense
+    and paged paths (memoized)."""
+    if "moe_setup" in _CACHE:
+        return _CACHE["moe_setup"]
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config("mixtral-8x7b").with_overrides(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+        d_ff=128, vocab_size=256, n_experts=4, sliding_window=128,
+        dtype="float32", param_dtype="float32")
+    eng = ServingEngine(cfg, n_slots=2, max_seq=64, lam=16, seed=0,
+                        buckets=AUDIT_BUCKETS)
+    setup = {
+        "cfg": cfg, "engine": eng, "model": eng.model,
+        "params": eng.params, "state": eng.state,
+        "tokens": jnp.zeros((2,), jnp.int32),
+        "buckets": AUDIT_BUCKETS,
+    }
+    _CACHE["moe_setup"] = setup
+    return setup
+
+
 def cache_bytes_of(state) -> int:
     k = state["cache"]["k"]
     return int(k.size) * int(np.dtype(k.dtype).itemsize)
@@ -126,6 +154,15 @@ def paged_decode_hlo_text() -> str:
         _CACHE["paged_decode_hlo"] = s["engine"]._decode_jit.lower(
             s["params"], s["state"], s["tokens"]).compile().as_text()
     return _CACHE["paged_decode_hlo"]
+
+
+def moe_decode_hlo_text() -> str:
+    """Optimized HLO of the MoE engine's decode jit (expert combine path)."""
+    if "moe_decode_hlo" not in _CACHE:
+        s = build_moe_audit_setup()
+        _CACHE["moe_decode_hlo"] = s["engine"]._decode_jit.lower(
+            s["params"], s["state"], s["tokens"]).compile().as_text()
+    return _CACHE["moe_decode_hlo"]
 
 
 def audit_decode_hlo(hlo_text: str, cache_bytes: int,
@@ -250,6 +287,56 @@ def measure_paged() -> Dict[str, float]:
     }
 
 
+def moe_ladder() -> Dict[str, int]:
+    """Prefill/insert compile ladders of the MoE engine (the bucket set
+    must bound the prefill lowerings exactly as on the dense path — the
+    router adds ops, not shapes)."""
+    if "moe_ladder" in _CACHE:
+        return _CACHE["moe_ladder"]
+    import jax.numpy as jnp
+    s = build_moe_audit_setup()
+    eng, m, params = s["engine"], s["model"], s["params"]
+    seen = set()
+    for Lb in s["buckets"]:
+        sub = m.init_decode_state(params, 1, Lb, per_slot=True)
+        low = eng._prefill_bucketed_jit.lower(
+            params, sub, jnp.zeros((1, Lb), jnp.int32),
+            jnp.asarray([Lb // 2], jnp.int32))
+        seen.add(hash(low.as_text()))
+    sub = m.init_decode_state(params, 1, AUDIT_BUCKETS[1], per_slot=True)
+    low_a = eng._insert_jit.lower(s["state"], sub, jnp.int32(0))
+    low_b = eng._insert_jit.lower(s["state"], sub, jnp.int32(1))
+    insert_lowerings = len({hash(low_a.as_text()), hash(low_b.as_text())})
+    _CACHE["moe_ladder"] = {"prefill_lowerings": len(seen),
+                            "n_buckets": len(s["buckets"]),
+                            "insert_lowerings": insert_lowerings}
+    return _CACHE["moe_ladder"]
+
+
+def measure_moe() -> Dict[str, float]:
+    """Budget-able numbers for the MoE decode hot path (same keys as
+    :func:`measure`: router + expert einsums + one-hot combine under the
+    same donation/copy/flops/bytes budgets)."""
+    s = build_moe_audit_setup()
+    txt = moe_decode_hlo_text()
+    full = H.full_analysis(txt)
+    coll = H.collective_bytes(txt)
+    ladder = moe_ladder()
+    n_coll = sum(coll["_counts"].values()) if "_counts" in coll else 0
+    cbytes = cache_bytes_of(s["state"])
+    param_copies = sum(1 for c in H.find_copy_ops(txt, min_bytes=cbytes)
+                       if c["from_parameter"])
+    return {
+        "dot_flops": float(full["dot_flops"]),
+        "hbm_bytes": float(full["hbm_bytes"]),
+        "collective_ops": float(n_coll),
+        "prefill_lowerings": float(ladder["prefill_lowerings"]),
+        "insert_lowerings": float(ladder["insert_lowerings"]),
+        "full_cache_param_copies": float(param_copies),
+        "aliased_outputs": float(len(H.input_output_aliases(txt))),
+    }
+
+
 def update_baselines(path: Path = BASELINES_PATH) -> Dict[str, float]:
     vals = measure()
     payload = {
@@ -261,6 +348,7 @@ def update_baselines(path: Path = BASELINES_PATH) -> Dict[str, float]:
         },
         "decode_step": vals,
         "paged_decode_step": measure_paged(),
+        "moe_decode_step": measure_moe(),
     }
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return vals
@@ -275,7 +363,8 @@ def audit_budgets(path: Path = BASELINES_PATH) -> List[Finding]:
     doc = json.loads(path.read_text())
     findings: List[Finding] = []
     for section, vals in (("decode_step", measure()),
-                          ("paged_decode_step", measure_paged())):
+                          ("paged_decode_step", measure_paged()),
+                          ("moe_decode_step", measure_moe())):
         base = doc.get(section, {})
         for key, tol in TOLERANCES.items():
             if key not in base:
@@ -330,5 +419,21 @@ def audit_compiled_hot_path() -> List[Finding]:
             "HLO003", "mount_slot_pages",
             f"page-table mount lowers {pl['mount_lowerings']} times for "
             f"two rows — the row must stay a traced scalar"))
+    ms = build_moe_audit_setup()
+    findings.extend(audit_decode_hlo(moe_decode_hlo_text(),
+                                     cache_bytes_of(ms["state"]),
+                                     where="moe_decode_step"))
+    ml = moe_ladder()
+    if ml["prefill_lowerings"] > ml["n_buckets"]:
+        findings.append(Finding(
+            "HLO003", "moe/prefill_bucketed",
+            f"{ml['prefill_lowerings']} distinct MoE prefill lowerings "
+            f"for {ml['n_buckets']} buckets — the bucket set no longer "
+            f"bounds the compile ladder on the expert path"))
+    if ml["insert_lowerings"] != 1:
+        findings.append(Finding(
+            "HLO003", "moe/insert_slot",
+            f"MoE insert_slot lowers {ml['insert_lowerings']} times for "
+            f"two slot indices — the slot must stay a traced scalar"))
     findings.extend(audit_budgets())
     return findings

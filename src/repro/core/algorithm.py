@@ -360,6 +360,15 @@ def stage_balanced_chain(blocks: Sequence[Block], cost: CostModel,
     g = graph_of(blocks)
     L, V = g.n_layers, net.n_devices
     layer_comp = float(sum(cost.compute(b, tau) for b in g.layer_blocks(0)))
+    # expert graphs: per-layer compute varies with the router load, so
+    # stage compute is a prefix-sum range, not shares[s] x one layer
+    # (dense graphs keep the original scalar arithmetic bit-for-bit)
+    has_experts = any(g.experts[l] for l in range(L))
+    if has_experts:
+        comp_cum = np.concatenate(
+            [[0.0], np.cumsum([sum(cost.compute(b, tau)
+                                   for b in g.layer_blocks(l))
+                               for l in range(L)])])
     boundary = cost.interlayer_bytes(tau)
 
     def chain_placement(devs: List[int], shares: np.ndarray) -> np.ndarray:
@@ -373,7 +382,12 @@ def stage_balanced_chain(blocks: Sequence[Block], cost: CostModel,
         return place
 
     def stage_time(devs, shares, s: int) -> float:
-        t = shares[s] * layer_comp / net.compute_avail[devs[s]]
+        if has_experts:
+            start = int(np.sum(shares[:s]))
+            comp = comp_cum[start + int(shares[s])] - comp_cum[start]
+            t = comp / net.compute_avail[devs[s]]
+        else:
+            t = shares[s] * layer_comp / net.compute_avail[devs[s]]
         # incoming edge comes from the nearest PRECEDING stage that still
         # holds layers (a rebalanced-to-zero stage is not on the chain)
         src = net.controller

@@ -470,7 +470,8 @@ class GalaxyPolicy(_PipelinePolicy):
                         for i, h in enumerate(self._graph.heads[l]):
                             place[h.index] = devs[i % len(devs)]
                         place[self._graph.proj[l].index] = fastest
-                        place[self._graph.ffn[l].index] = fastest
+                        for ob in self._graph.out_blocks(l):
+                            place[ob.index] = fastest
                 self._frozen_place = place
             return self._frozen_place.copy()
         return np.full(len(self.blocks), self.stages[0][0][0], dtype=int)
@@ -493,7 +494,8 @@ class ColumnCoPartitionPolicy(Policy):
         g = graph_of(self.blocks)
         self._n_per_layer = len(g.layer_blocks(0))
         col_cost = dataclasses.replace(cost, layer_mode="columns")
-        self._col_blocks = make_blocks(cost.n_heads)
+        self._col_blocks = make_blocks(cost.n_heads, 1, cost.n_experts,
+                                       cost.expert_replicas)
         self._inner = ResourceAwarePolicy(self._col_blocks, col_cost, **kw)
 
     def place(self, net, tau, prev):

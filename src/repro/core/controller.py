@@ -30,6 +30,7 @@ from repro.core.network import DeviceNetwork
 from repro.core.placement_bridge import (apply_head_perm,
                                          apply_layer_head_perms,
                                          migration_pairs_layers,
+                                         placement_to_expert_perms,
                                          placement_to_perms, relative_perms)
 
 
@@ -55,6 +56,10 @@ class ControllerConfig:
     # ``amortize`` intervals (baselines.ResourceAwarePolicy docstring).
     search: str = "rescoring"
     amortize: int = 16
+    # physical expert rows per mesh slot (MoE archs).  0 = derive from the
+    # cost model: expert_slots // n_devices (expert rows, like heads, tile
+    # the mesh).  Only consulted when the cost model carries experts.
+    experts_per_slot: int = 0
 
 
 class IntervalController:
@@ -63,10 +68,16 @@ class IntervalController:
     def __init__(self, n_heads: int, cost: CostModel, net: DeviceNetwork,
                  cfg: ControllerConfig = ControllerConfig()):
         self.n_layers = cost.n_layers if cost.layer_mode == "graph" else 1
-        self.blocks: List[Block] = make_blocks(n_heads, self.n_layers)
+        self.blocks: List[Block] = make_blocks(n_heads, self.n_layers,
+                                               cost.n_experts,
+                                               cost.expert_replicas)
         self.cost = cost
         self.net = net
         self.cfg = cfg
+        self.has_experts = cost.n_experts >= 2
+        self.experts_per_slot = cfg.experts_per_slot
+        if self.has_experts and not self.experts_per_slot:
+            self.experts_per_slot = max(1, cost.expert_slots // net.n_devices)
         # the feasibility budget is the WHOLE interval: λ tokens at the
         # per-token deadline (conflating them made every ffn infeasible)
         self.assigner = ResourceAwareAssigner(self.blocks, cost,
@@ -92,6 +103,8 @@ class IntervalController:
                 amortize=cfg.amortize, min_gain=cfg.min_gain)
         self.place: Optional[np.ndarray] = None
         self.perms: Optional[np.ndarray] = None   # (n_layers, slots·hps)
+        # (n_layers, slots·eps) physical expert-row layout (MoE archs)
+        self.expert_perms: Optional[np.ndarray] = None
         self.tau = 0
         self.history: List[dict] = []
 
@@ -114,6 +127,27 @@ class IntervalController:
             self.net.compute_avail = np.asarray(compute_avail, float)
         if mem_avail is not None:
             self.net.mem_capacity = np.asarray(mem_avail, float)
+
+    def update_expert_loads(self, loads):
+        """Feed observed router loads (rows: per layer, one entry per
+        physical expert slot, each row summing to ~1) into the expert cost
+        model.  The assigner/policy are rebuilt around the new CostModel so
+        the *next* ``step_interval`` prices expert compute and placement by
+        the live gate frequencies — the engine calls this each interval
+        with the decode state's router-load EWMA."""
+        if not self.has_experts:
+            return
+        self.cost = self.cost.with_expert_loads(loads)
+        self.assigner = ResourceAwareAssigner(
+            self.blocks, self.cost,
+            deadline=self.cfg.deadline * self.cfg.lam)
+        if self._policy is not None:
+            from repro.core.baselines import ResourceAwarePolicy
+            self._policy = ResourceAwarePolicy(
+                self.blocks, self.cost,
+                deadline=self.cfg.deadline * self.cfg.lam,
+                pipeline_k=self.cfg.pipeline_k, search="bottleneck",
+                amortize=self.cfg.amortize, min_gain=self.cfg.min_gain)
 
     # ------------------------------------------------------------- decide
     def step_interval(self, tau: Optional[int] = None) -> dict:
@@ -155,6 +189,15 @@ class IntervalController:
         pairs = [] if self.perms is None else \
             migration_pairs_layers(self.perms, new_perms,
                                    self.cfg.heads_per_slot)
+        new_eperms = None
+        epairs: List[tuple] = []
+        if self.has_experts:
+            new_eperms = placement_to_expert_perms(
+                place, self.blocks, n_slots, self.experts_per_slot,
+                self.cost.expert_replicas)
+            if self.expert_perms is not None:
+                epairs = migration_pairs_layers(self.expert_perms, new_eperms,
+                                                self.experts_per_slot)
         d_mig = migration_delay(prev, place, self.blocks, self.cost,
                                 self.net, self.tau)
         plan = {"tau": self.tau, "place": place,
@@ -162,12 +205,18 @@ class IntervalController:
                 "perm": new_perms[0],
                 "prev_perm": None if self.perms is None else self.perms[0],
                 "migrations": pairs,
+                "expert_perms": new_eperms,
+                "prev_expert_perms": self.expert_perms,
+                "expert_migrations": epairs,
                 "d_mig_est": d_mig,
                 "d_pipe_est": pipelined_inference_delay(
                     place, self.blocks, self.cost, self.net, self.tau, k=k),
                 "infeasible": stats.infeasible}
         self.place, self.perms = place, new_perms
+        if new_eperms is not None:
+            self.expert_perms = new_eperms
         self.history.append({"tau": self.tau, "n_migrations": len(pairs),
+                             "n_expert_migrations": len(epairs),
                              "d_mig_est": d_mig,
                              "infeasible": stats.infeasible})
         return plan

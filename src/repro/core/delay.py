@@ -76,6 +76,25 @@ def _rate(net: DeviceNetwork, j: int, k: int) -> float:
     return float(net.bandwidth[j, k])
 
 
+def _expert_stage(g, l, place, cost, tau):
+    """Per-device (load fraction, summed compute) of layer l's expert
+    blocks: the router fan-out/combine structure the delay model prices.
+
+    Zero-load slots contribute nothing (no tokens are routed there); the
+    per-device compute is summed BEFORE the single divide by the device
+    rate so a co-located uniform-load expert set prices bit-for-bit like
+    the dense ffn it collapses to."""
+    agg: dict = {}
+    for eb in g.experts[l]:
+        ld = cost.expert_load(eb)
+        if ld == 0.0:
+            continue
+        d = int(place[eb.index])
+        fr, cp = agg.get(d, (0.0, 0.0))
+        agg[d] = (fr + ld, cp + cost.compute(eb, tau))
+    return agg
+
+
 def inference_delay(place: np.ndarray, blocks: Sequence[Block],
                     cost: CostModel, net: DeviceNetwork, tau: int,
                     *, strict_eq6: bool = False) -> float:
@@ -83,13 +102,15 @@ def inference_delay(place: np.ndarray, blocks: Sequence[Block],
     inter-layer edges (see module docstring)."""
     g = graph_of(blocks)
     total = 0.0
-    src_dev = net.controller              # layer 0: token embeddings
+    # layer 0: token embeddings from the controller; expert layers hand a
+    # (device, load fraction) SOURCE LIST to the next layer's heads — the
+    # router combine — which the dense path degenerates to as [(ffn, 1.0)]
+    sources = [(net.controller, 1.0)]
     w_in = cost.input_bytes(tau)
     w_head = cost.head_to_proj_bytes(tau)
     for l in range(g.n_layers):
         heads = g.heads[l]
         d_proj = int(place[g.proj[l].index])
-        d_ffn = int(place[g.ffn[l].index])
 
         # per-device summed head compute (sequential sharing)
         head_compute_on = np.zeros(net.n_devices)
@@ -103,7 +124,7 @@ def inference_delay(place: np.ndarray, blocks: Sequence[Block],
         worst = 0.0
         for h in heads:
             j = int(place[h.index])
-            t_in = w_in / _rate(net, src_dev, j)
+            t_in = sum(fr * w_in / _rate(net, s, j) for s, fr in sources)
             t_proc = head_compute_on[j] / net.compute_avail[j]
             t_out = vol_to_proj[j] / _rate(net, j, d_proj)
             worst = max(worst, t_in + t_proc + t_out)
@@ -111,12 +132,33 @@ def inference_delay(place: np.ndarray, blocks: Sequence[Block],
         total += worst
         if not strict_eq6:
             total += cost.compute(g.proj[l], tau) / net.compute_avail[d_proj]
-        total += cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn)
-        if not strict_eq6:
-            total += cost.compute(g.ffn[l], tau) / net.compute_avail[d_ffn]
-
-        # the next layer's heads read this layer's output from d(ffn(l))
-        src_dev = d_ffn
+        if g.ffn[l] is not None:
+            d_ffn = int(place[g.ffn[l].index])
+            total += cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn)
+            if not strict_eq6:
+                total += cost.compute(g.ffn[l], tau) \
+                    / net.compute_avail[d_ffn]
+            sources = [(d_ffn, 1.0)]
+        else:
+            # expert stage: router fan-out (load-fraction-scaled
+            # proj->expert transfer) + per-device expert compute, run in
+            # parallel across expert devices -> the stage is the slowest
+            # device's (transfer, compute) pair, added as two terms to
+            # keep the dense float association when collapsed
+            agg = _expert_stage(g, l, place, cost, tau)
+            w_p2f = cost.proj_to_ffn_bytes(tau)
+            stage_t = stage_c = 0.0
+            stage = -1.0
+            for d in sorted(agg):
+                fr, cp = agg[d]
+                t_x = fr * w_p2f / _rate(net, d_proj, d)
+                t_c = 0.0 if strict_eq6 else cp / net.compute_avail[d]
+                if t_x + t_c > stage:
+                    stage, stage_t, stage_c = t_x + t_c, t_x, t_c
+            total += stage_t
+            if not strict_eq6:
+                total += stage_c
+            sources = [(d, agg[d][0]) for d in sorted(agg)]
         w_in = cost.interlayer_bytes(tau)
     return float(total)
 
@@ -143,13 +185,12 @@ def resource_busy_times(place: np.ndarray, blocks: Sequence[Block],
         if j != k and seconds > 0.0:
             link_busy[(j, k)] = link_busy.get((j, k), 0.0) + seconds
 
-    src_dev = net.controller
+    sources = [(net.controller, 1.0)]
     w_in = cost.input_bytes(tau)
     w_head = cost.head_to_proj_bytes(tau)
     for l in range(g.n_layers):
         heads = g.heads[l]
         d_proj = int(place[g.proj[l].index])
-        d_ffn = int(place[g.ffn[l].index])
         head_devs = set()
         for h in heads:
             j = int(place[h.index])
@@ -157,17 +198,32 @@ def resource_busy_times(place: np.ndarray, blocks: Sequence[Block],
             dev_busy[j] += cost.compute(h, tau) / net.compute_avail[j]
             add_link(j, d_proj, w_head / _rate(net, j, d_proj))
         # inter-layer broadcast: one transfer per destination device
-        # (co-located heads share it — the controller-input convention)
-        for j in sorted(head_devs):
-            add_link(src_dev, j, w_in / _rate(net, src_dev, j))
+        # (co-located heads share it — the controller-input convention);
+        # expert layers fan in from every expert-hosting source device
+        # with its load fraction's share of the activation
+        for s, fr in sources:
+            for j in sorted(head_devs):
+                add_link(s, j, fr * w_in / _rate(net, s, j))
         if not strict_eq6:
             dev_busy[d_proj] += cost.compute(g.proj[l], tau) \
                 / net.compute_avail[d_proj]
-            dev_busy[d_ffn] += cost.compute(g.ffn[l], tau) \
-                / net.compute_avail[d_ffn]
-        add_link(d_proj, d_ffn,
-                 cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn))
-        src_dev = d_ffn
+        if g.ffn[l] is not None:
+            d_ffn = int(place[g.ffn[l].index])
+            if not strict_eq6:
+                dev_busy[d_ffn] += cost.compute(g.ffn[l], tau) \
+                    / net.compute_avail[d_ffn]
+            add_link(d_proj, d_ffn,
+                     cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn))
+            sources = [(d_ffn, 1.0)]
+        else:
+            agg = _expert_stage(g, l, place, cost, tau)
+            w_p2f = cost.proj_to_ffn_bytes(tau)
+            for d in sorted(agg):
+                fr, cp = agg[d]
+                if not strict_eq6:
+                    dev_busy[d] += cp / net.compute_avail[d]
+                add_link(d_proj, d, fr * w_p2f / _rate(net, d_proj, d))
+            sources = [(d, agg[d][0]) for d in sorted(agg)]
         w_in = cost.interlayer_bytes(tau)
     return dev_busy, link_busy
 

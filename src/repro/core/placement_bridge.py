@@ -21,7 +21,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.blocks import Block, HEAD, graph_of
+from repro.core.blocks import Block, HEAD, expert_slot, graph_of
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +143,84 @@ def placement_to_perms(place: np.ndarray, blocks: Sequence[Block],
     return np.stack([placement_to_perm(place, g.layer_blocks(l),
                                        n_slots, heads_per_slot, group_size)
                      for l in range(g.n_layers)])
+
+
+def placement_to_expert_perms(place: np.ndarray, blocks: Sequence[Block],
+                              n_slots: int, experts_per_slot: int,
+                              expert_replicas: int = 1) -> np.ndarray:
+    """Per-layer *expert-slot* permutations — the expert analog of
+    ``placement_to_perms``.  Row l maps permutation position p (mesh slot
+    ``p // experts_per_slot``) to the physical expert-row id
+    (``blocks.expert_slot``: expert_id·R + replica) Algorithm 1 placed
+    there; overflow beyond a slot's capacity spills round-robin exactly
+    like head spill.  Shape (n_layers, n_slots·experts_per_slot) — for the
+    permutation to be physically applicable to the weight stacks,
+    ``n_slots·experts_per_slot`` must equal the number of physical expert
+    rows (asserted)."""
+    g = graph_of(blocks)
+    positions = n_slots * experts_per_slot
+    rows = []
+    for l in range(g.n_layers):
+        ebs = g.experts[l]
+        assert positions == len(ebs), (positions, len(ebs))
+        buckets: List[List[int]] = [[] for _ in range(n_slots)]
+        spilled: List[int] = []
+        for b in ebs:
+            j = int(place[b.index]) % n_slots
+            sid = expert_slot(b, expert_replicas)
+            if len(buckets[j]) < experts_per_slot:
+                buckets[j].append(sid)
+            else:
+                spilled.append(sid)
+        for sid in spilled:
+            j = int(np.argmin([len(bk) for bk in buckets]))
+            buckets[j].append(sid)
+        perm: List[int] = []
+        for bk in buckets:
+            perm.extend(bk)
+        rows.append(np.array(perm))
+    return np.stack(rows)
+
+
+def permute_model_experts_layers(params, perms):
+    """Physically relocate MoE expert rows: row l of ``perms`` reorders
+    layer l's physical expert axis of ``w_gate/w_up/w_down`` AND the
+    ``owner``/``share`` maps that travel with the rows — the expert twin of
+    ``permute_model_heads_layers``.  The combine scatters physical rows
+    back into logical-expert order (models.moe), so the model function is
+    bit-identical — only which mesh slot holds which expert row changes.
+    Requires owner/share to be present (the serving engine installs
+    identity maps at init for MoE archs)."""
+    idx = jnp.asarray(perms)
+
+    def take(w, axis):
+        axis = axis % w.ndim
+        shape = [1] * w.ndim
+        shape[0] = idx.shape[0]
+        shape[axis] = idx.shape[1]
+        return jnp.take_along_axis(w, idx.reshape(shape), axis=axis)
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k == "moe" and isinstance(v, dict):
+                    if "owner" not in v:
+                        raise ValueError(
+                            "expert migration needs owner/share maps "
+                            "(install moe.expert_identity first)")
+                    m = dict(v)
+                    for n in ("w_gate", "w_up", "w_down"):
+                        m[n] = take(v[n], -3)
+                    for n in ("owner", "share"):
+                        m[n] = take(v[n], -1)
+                    out[k] = m
+                else:
+                    out[k] = visit(v)
+            return out
+        return tree
+
+    return visit(params)
 
 
 def kv_group_perms(perms: np.ndarray, group_size: int) -> np.ndarray:
@@ -349,15 +427,27 @@ def apply_layer_head_perms(cache_k, cache_v, perms, *, layer_axis: int = 0,
     being silently skipped.  ``rep`` > 1 additionally lifts the induced
     Kp-row permutations onto the KvE replicated cache rows
     (``expand_kv_perms``) — the replica-aware migration that makes
-    ``HeadDims.rep > 1`` engines migratable."""
+    ``HeadDims.rep > 1`` engines migratable.
+
+    ``perms`` may carry MULTIPLE leading index dims — e.g. (G, 4, H) for a
+    VLM supergroup cache stack (G, 4, B, T, KvE, dh) — occupying the cache
+    axes starting at ``layer_axis``; each leading cell then gets its own
+    head permutation (per-supergroup-row VLM migration, no all-layers-equal
+    restriction)."""
     if group_size > 1:
-        perms = expand_kv_perms(kv_group_perms(perms, group_size), rep)
+        shp = np.shape(perms)
+        flat = expand_kv_perms(
+            kv_group_perms(np.asarray(perms).reshape(-1, shp[-1]),
+                           group_size), rep)
+        perms = flat.reshape(tuple(shp[:-1]) + (flat.shape[-1],))
     idx = jnp.asarray(perms)
 
     def take(c):
         shape = [1] * c.ndim
-        shape[layer_axis % c.ndim] = idx.shape[0]
-        shape[head_axis % c.ndim] = idx.shape[1]
+        la = layer_axis % c.ndim
+        for a in range(idx.ndim - 1):
+            shape[la + a] = idx.shape[a]
+        shape[head_axis % c.ndim] = idx.shape[-1]
         return jnp.take_along_axis(c, idx.reshape(shape),
                                    axis=head_axis % c.ndim)
     return take(cache_k), take(cache_v)
@@ -426,16 +516,27 @@ def permute_model_heads_layers(params, perms, *, has_bias: bool = False,
     by the query-head rows, wk/wv/bk/bv by the induced per-layer KV-group
     permutations (``kv_group_perms``) — the grouped-KV migration that used
     to be silently skipped.
+
+    ``perms`` may carry multiple leading index dims — (G, 4, H) for the
+    VLM's supergroup-stacked self-attn params — matching the params' own
+    leading stack axes (per-layer VLM migration, see
+    ``apply_layer_head_perms``).
     """
     idx = jnp.asarray(perms)
-    kv = idx if group_size <= 1 else \
-        jnp.asarray(kv_group_perms(perms, group_size))
+    if group_size <= 1:
+        kv = idx
+    else:
+        shp = np.shape(perms)
+        kvf = kv_group_perms(np.asarray(perms).reshape(-1, shp[-1]),
+                             group_size)
+        kv = jnp.asarray(kvf.reshape(tuple(shp[:-1]) + (kvf.shape[-1],)))
 
     def take(w, axis, rows):
         axis = axis % w.ndim
         shape = [1] * w.ndim
-        shape[0] = rows.shape[0]
-        shape[axis] = rows.shape[1]
+        for a in range(rows.ndim - 1):
+            shape[a] = rows.shape[a]
+        shape[axis] = rows.shape[-1]
         return jnp.take_along_axis(w, rows.reshape(shape), axis=axis)
 
     def visit(tree):

@@ -26,7 +26,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.blocks import Block, CostModel, HEAD, PROJ, graph_of
+from repro.core.blocks import Block, CostModel, EXPERT, HEAD, PROJ, graph_of
 from repro.core.network import DeviceNetwork
 
 
@@ -54,9 +54,15 @@ def comm_factor(block: Block, j: int, blocks: Sequence[Block],
         if l == 0:
             t += cost.input_bytes(tau) / rate(net.controller, j)
         else:
-            src = dev(g.ffn[l - 1])
-            if src >= 0:
-                t += cost.interlayer_bytes(tau) / rate(src, j)
+            # inbound activation: the dense ffn, or the load-weighted
+            # expert combine fan-in (sources with unknown devices skipped)
+            for src_bl in g.out_blocks(l - 1):
+                src = dev(src_bl)
+                if src < 0:
+                    continue
+                fr = 1.0 if src_bl.kind != EXPERT \
+                    else cost.expert_load(src_bl)
+                t += fr * cost.interlayer_bytes(tau) / rate(src, j)
         proj_dev = dev(g.proj[l])
         if proj_dev >= 0:
             t += cost.head_to_proj_bytes(tau) / rate(j, proj_dev)
@@ -67,9 +73,26 @@ def comm_factor(block: Block, j: int, blocks: Sequence[Block],
         t = 0.0
         if head_devs:
             t = t_in / min(rate(h_dev, j) for h_dev in head_devs)
-        ffn_dev = dev(g.ffn[l])
-        if ffn_dev >= 0:
-            t = max(t, cost.proj_to_ffn_bytes(tau) / rate(j, ffn_dev))
+        for out_bl in g.out_blocks(l):
+            out_dev = dev(out_bl)
+            if out_dev < 0:
+                continue
+            fr = 1.0 if out_bl.kind != EXPERT else cost.expert_load(out_bl)
+            t = max(t, fr * cost.proj_to_ffn_bytes(tau) / rate(j, out_dev))
+        return t / deadline
+    if block.kind == EXPERT:
+        # router fan-out in (load-fraction share of the proj activation),
+        # combine out (same share of the next layer's activation broadcast)
+        fr = cost.expert_load(block)
+        t = 0.0
+        proj_dev = dev(g.proj[l])
+        if proj_dev >= 0:
+            t = fr * cost.proj_to_ffn_bytes(tau) / rate(proj_dev, j)
+        if l + 1 < g.n_layers:
+            next_devs = [rate(j, d) for d in (dev(h) for h in g.heads[l + 1])
+                         if d >= 0]
+            if next_devs:
+                t = max(t, fr * cost.interlayer_bytes(tau) / min(next_devs))
         return t / deadline
     # ffn: inbound from proj(l), outbound broadcast to layer l+1's heads
     t = 0.0

@@ -7,6 +7,24 @@ packed dispatch; a capacity-bucketed dispatch variant is provided
 (``capacity_factor > 0``) for the optimized path (§Perf) which restores
 O(tokens * top_k) compute via gather/one-hot matmuls of size
 (E, capacity, D).
+
+Physical expert layout (expert migration/replication): the weight stacks
+``w_gate/w_up/w_down`` may hold the experts in an arbitrary *physical* row
+order — or with extra replica rows — described by two side arrays in the
+same param dict:
+
+ - ``owner``  (Ep,) int32: physical row r holds a copy of logical expert
+   ``owner[r]`` (Ep >= E when replicas exist);
+ - ``share``  (Ep,) float32: row r's fraction of its logical expert's gate
+   (replicas renormalize — rows owned by the same expert sum to 1).
+
+The router always scores the E *logical* experts; physical rows compute,
+and the combine scatters row outputs back into logical-expert order via a
+one-hot matmul before the gate reduction.  With identity owner/share this
+adds only exact-zero terms and 1.0 multiplies, and a pure permutation
+gathers bit-identical per-expert outputs back into logical order — so
+decode streams are bit-identical across applied expert migrations, the
+same guarantee head migrations give via inverse head maps.
 """
 from __future__ import annotations
 
@@ -17,6 +35,60 @@ from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init
 from repro.models.partitioning import Partitioner
 from repro.models.quantization import wt
+
+
+def expert_identity(n_experts: int, n_layers: int = 0):
+    """Identity (owner, share) arrays: row r owns logical expert r with the
+    full gate.  ``n_layers > 0`` returns stacked (L, E) arrays for the
+    scanned layer pytree."""
+    owner = jnp.arange(n_experts, dtype=jnp.int32)
+    share = jnp.ones((n_experts,), jnp.float32)
+    if n_layers:
+        owner = jnp.broadcast_to(owner[None], (n_layers, n_experts))
+        share = jnp.broadcast_to(share[None], (n_layers, n_experts))
+    return owner, share
+
+
+def _combine_physical(out, p, n_experts: int):
+    """Scatter physical expert-row outputs (B,S,Ep,D) into logical-expert
+    slots (B,S,E,D): z_e = sum_{r: owner[r]=e} share[r] * out_r."""
+    share = p["share"].astype(out.dtype)
+    onehot = jax.nn.one_hot(p["owner"], n_experts, dtype=out.dtype)  # (Ep,E)
+    return jnp.einsum("bsrd,re->bsed", out * share[None, None, :, None],
+                      onehot)
+
+
+def replicate_expert(p: dict, expert: int) -> dict:
+    """Append one physical replica of logical ``expert``: copy its weight
+    rows and renormalize the gate share evenly across all of its copies.
+    Accepts a per-layer moe dict ((E,D,F) weights) or the stacked layer
+    pytree ((L,E,D,F)); installs identity owner/share first if absent."""
+    stacked = p["w_gate"].ndim == 4
+    ax = 1 if stacked else 0
+    out = dict(p)
+    if "owner" not in out:
+        E = p["w_gate"].shape[ax]
+        L = p["w_gate"].shape[0] if stacked else 0
+        out["owner"], out["share"] = expert_identity(E, L)
+    own, sh = out["owner"], out["share"]
+    # per-layer physical source row currently owning ``expert``
+    src = jnp.argmax((own == expert).astype(jnp.int32), axis=-1)
+    for name in ("w_gate", "w_up", "w_down"):
+        w = out[name]
+        if stacked:
+            idx = src.reshape((-1,) + (1,) * (w.ndim - 1))
+            row = jnp.take_along_axis(w, idx, axis=1)          # (L,1,D,F)
+            out[name] = jnp.concatenate([w, row], axis=1)
+        else:
+            out[name] = jnp.concatenate([w, w[src][None]], axis=0)
+    new_col = jnp.full(own.shape[:-1] + (1,), expert, own.dtype)
+    own = jnp.concatenate([own, new_col], axis=-1)
+    sh = jnp.concatenate([sh, jnp.ones(new_col.shape, sh.dtype)], axis=-1)
+    mask = own == expert
+    cnt = jnp.sum(mask, axis=-1, keepdims=True).astype(sh.dtype)
+    out["owner"] = own
+    out["share"] = jnp.where(mask, 1.0 / cnt, sh)
+    return out
 
 
 def init_moe(key, cfg: ModelConfig) -> dict:
@@ -48,17 +120,24 @@ def router_probs(cfg: ModelConfig, p: dict, x):
 
 
 def moe_block(cfg: ModelConfig, p: dict, x, part: Partitioner):
-    """Dense-dispatch MoE. x: (B,S,D) -> (B,S,D), aux_loss scalar."""
+    """Dense-dispatch MoE. x: (B,S,D) -> (B,S,D), aux_loss scalar, plus the
+    logical per-expert routed-token fraction (E,) observed on this call
+    (the router-load signal the controller's expert cost model consumes)."""
     gates, aux = router_probs(cfg, p, x)                          # (B,S,E)
+    freq = jnp.mean((gates > 0).astype(jnp.float32), axis=(0, 1))
     gates = gates.astype(x.dtype)
     # Every expert computes on all tokens; outputs combined by gate weight.
+    # With a physical owner map the einsums run over the Ep physical rows
+    # and the combine first scatters rows back into logical-expert order.
     h = jnp.einsum("bsd,edf->bsef", x, wt(p, "w_gate", x.dtype))
     u = jnp.einsum("bsd,edf->bsef", x, wt(p, "w_up", x.dtype))
     h = jax.nn.silu(h) * u
     h = part.constrain(h, ("batch", "seq", "experts", "d_ff"))
     out = jnp.einsum("bsef,efd->bsed", h, wt(p, "w_down", x.dtype))
+    if "owner" in p:
+        out = _combine_physical(out, p, cfg.n_experts)
     out = jnp.einsum("bsed,bse->bsd", out, gates)
-    return part.constrain(out, ("batch", "res_seq", "d_model")), aux
+    return part.constrain(out, ("batch", "res_seq", "d_model")), aux, freq
 
 
 def moe_block_capacity(cfg: ModelConfig, p: dict, x, part: Partitioner,
@@ -80,8 +159,16 @@ def moe_block_capacity(cfg: ModelConfig, p: dict, x, part: Partitioner,
     BG = B * (S // n)
     cap = max(int(capacity_factor * k * n / E), 1)
     gates, aux = router_probs(cfg, p, x)                           # (B,S,E)
+    freq = jnp.mean((gates > 0).astype(jnp.float32), axis=(0, 1))
+    gates = gates.astype(x.dtype)
+    if "owner" in p:
+        # expand logical gates onto physical rows: replicas of an expert
+        # each dispatch the token with their share of its gate
+        gates = jnp.take(gates, p["owner"], axis=-1) \
+            * p["share"].astype(x.dtype)
+    Ep = gates.shape[-1]
     xg = x.reshape(BG, n, D)
-    gt = gates.reshape(BG, n, E).astype(x.dtype)
+    gt = gates.reshape(BG, n, Ep)
     sel = gt > 0
     pos = jnp.cumsum(sel.astype(jnp.int32), axis=1) - 1            # (BG,n,E)
     keep = sel & (pos < cap)
@@ -97,4 +184,4 @@ def moe_block_capacity(cfg: ModelConfig, p: dict, x, part: Partitioner,
     comb = disp * gt[:, :, :, None]                                # (BG,n,E,C)
     y = jnp.einsum("gecd,gnec->gnd", ye, comb)
     out = y.reshape(B, S, D)
-    return part.constrain(out, ("batch", "res_seq", "d_model")), aux
+    return part.constrain(out, ("batch", "res_seq", "d_model")), aux, freq

@@ -29,6 +29,11 @@ REMAT_POLICIES = {
     "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
 }
 
+# decay of the router-load EWMA kept in the decode state ("expert_load"):
+# load_t = d*load_{t-1} + (1-d)*freq_t.  The serving engine normalizes and
+# feeds it to the controller's expert cost model each interval.
+EXPERT_LOAD_EWMA = 0.9
+
 
 class TransformerLM:
     """Config-driven decoder-only LM."""
@@ -138,15 +143,16 @@ class TransformerLM:
         h = L.apply_norm(cfg, p, "ln2", x)
         h = part.constrain(h, ("batch", "seq", "d_model"))
         aux = jnp.zeros((), jnp.float32)
+        freq = None
         if cfg.is_moe:
             if self.capacity_moe:
-                mlp_out, aux = moe_block_capacity(cfg, p["moe"], h, part,
-                                                  self.capacity_factor)
+                mlp_out, aux, freq = moe_block_capacity(
+                    cfg, p["moe"], h, part, self.capacity_factor)
             else:
-                mlp_out, aux = moe_block(cfg, p["moe"], h, part)
+                mlp_out, aux, freq = moe_block(cfg, p["moe"], h, part)
         else:
             mlp_out = L.mlp_block(cfg, p["mlp"], h, part)
-        return x + mlp_out, new_cache, aux
+        return x + mlp_out, new_cache, aux, freq
 
     def _cross_layer(self, p: dict, x, img_kv, img_mask):
         cfg, part = self.cfg, self.part
@@ -197,17 +203,19 @@ class TransformerLM:
                 (self_p, cross_p, kv) = xs
                 for i in range(3):
                     sp = jax.tree.map(lambda a, i=i: a[i], self_p)
-                    x, _, a = self._layer(sp, x, positions, None, cache_pos)
+                    x, _, a, _ = self._layer(sp, x, positions, None, cache_pos)
                     aux += a
                 x = self._cross_layer(cross_p, x, kv, img_mask)
                 sp = jax.tree.map(lambda a: a[3], self_p)
-                x, _, a = self._layer(sp, x, positions, None, cache_pos)
+                x, _, a, _ = self._layer(sp, x, positions, None, cache_pos)
                 return (x, aux + a), None
             layer_p, layer_cache, rows, inv = xs
-            x, new_cache, a = self._layer(layer_p, x, positions, layer_cache,
-                                          cache_pos, rows, inv,
-                                          page_map=page_map,
-                                          write_valid=write_valid)
+            x, new_cache, a, f = self._layer(layer_p, x, positions,
+                                             layer_cache, cache_pos, rows,
+                                             inv, page_map=page_map,
+                                             write_valid=write_valid)
+            if self.cfg.is_moe:
+                return (x, aux + a), (new_cache, f)
             return (x, aux + a), new_cache
 
         if self.remat != "none":
@@ -222,10 +230,15 @@ class TransformerLM:
                                                    body)
             xs = (params["layers"], params["cross_layers"], img_kv)
             (x, aux), _ = jax.lax.scan(body, (x, aux0), xs)
-            return x, None, aux
+            return x, None, aux, None
         xs = (params["layers"], cache, head_rows, head_inv)
+        if self.cfg.is_moe:
+            # ys carry the per-layer routed-token fractions alongside the
+            # cache -> stacked (L, E) router-load observation
+            (x, aux), (new_cache, freqs) = jax.lax.scan(body, (x, aux0), xs)
+            return x, new_cache, aux, freqs
         (x, aux), new_cache = jax.lax.scan(body, (x, aux0), xs)
-        return x, new_cache, aux
+        return x, new_cache, aux, None
 
     def _run_layers_vlm_cached(self, params, x, positions, cache, cache_pos,
                                img_kv, img_mask, _body_unused):
@@ -238,20 +251,20 @@ class TransformerLM:
             for i in range(3):
                 sp = jax.tree.map(lambda a, i=i: a[i], self_p)
                 lc = jax.tree.map(lambda a, i=i: a[i], self_cache)
-                x, nc, a = self._layer(sp, x, positions, lc, cache_pos)
+                x, nc, a, _ = self._layer(sp, x, positions, lc, cache_pos)
                 new_caches.append(nc)
                 aux += a
             x = self._cross_layer(cross_p, x, kv, img_mask)
             sp = jax.tree.map(lambda a: a[3], self_p)
             lc = jax.tree.map(lambda a: a[3], self_cache)
-            x, nc, a = self._layer(sp, x, positions, lc, cache_pos)
+            x, nc, a, _ = self._layer(sp, x, positions, lc, cache_pos)
             new_caches.append(nc)
             stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches)
             return (x, aux + a), stacked
 
         xs = (params["layers"], params["cross_layers"], img_kv, cache)
         (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
-        return x, new_cache, aux
+        return x, new_cache, aux, None
 
     def forward(self, params, tokens, *, img_embeds=None, img_mask=None):
         """Full-sequence forward (training / no-cache prefill). Returns
@@ -263,8 +276,8 @@ class TransformerLM:
         img_kv = None
         if self.is_vlm:
             img_kv = self._project_img_kv(params, img_embeds)
-        x, _, aux = self._run_layers(params, x, positions, None, None,
-                                     img_kv=img_kv, img_mask=img_mask)
+        x, _, aux, _ = self._run_layers(params, x, positions, None, None,
+                                        img_kv=img_kv, img_mask=img_mask)
         x = L.apply_norm(cfg, params, "ln_f", x)
         logits = L.unembed(cfg, params, x, part)
         return logits, aux
@@ -312,6 +325,12 @@ class TransformerLM:
             else jnp.zeros((), jnp.int32)
         state: Dict[str, Any] = {"cache": self.init_cache(batch, max_seq, dtype),
                                  "pos": pos0}
+        if self.cfg.is_moe:
+            # router-load EWMA, uniform prior; decode_step folds each step's
+            # observed routed-token fractions in (EXPERT_LOAD_EWMA decay)
+            E = self.cfg.n_experts
+            state["expert_load"] = jnp.full(
+                (self.cfg.n_layers, E), 1.0 / E, jnp.float32)
         if self.is_vlm:
             state["img_kv"] = self._project_img_kv(params, img_embeds)
             state["img_mask"] = img_mask
@@ -324,7 +343,7 @@ class TransformerLM:
         B, S = tokens.shape
         x = L.embed(cfg, params, tokens, part)
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
-        x, new_cache, _ = self._run_layers(
+        x, new_cache, _, _ = self._run_layers(
             params, x, positions, state["cache"], jnp.zeros((), jnp.int32),
             img_kv=state.get("img_kv"), img_mask=state.get("img_mask"))
         x = L.apply_norm(cfg, params, "ln_f", x)
@@ -351,7 +370,7 @@ class TransformerLM:
         else:
             positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
         page_map = state.get("page_map")
-        x, new_cache, _ = self._run_layers(
+        x, new_cache, _, freqs = self._run_layers(
             params, x, positions, state["cache"], pos,
             img_kv=state.get("img_kv"), img_mask=state.get("img_mask"),
             head_rows=state.get("head_rows"), head_inv=state.get("head_inv"),
@@ -369,7 +388,12 @@ class TransformerLM:
             new_pos = jnp.minimum(pos + 1, jnp.int32(T))
         else:
             new_pos = pos + 1
-        return logits[:, 0], dict(state, cache=new_cache, pos=new_pos)
+        new_state = dict(state, cache=new_cache, pos=new_pos)
+        if freqs is not None and "expert_load" in state:
+            d = jnp.float32(EXPERT_LOAD_EWMA)
+            new_state["expert_load"] = (d * state["expert_load"]
+                                        + (1.0 - d) * freqs)
+        return logits[:, 0], new_state
 
     # ----------------------------------------------- continuous batching
     def prefill_bucketed(self, params, state, tokens, length):
@@ -384,7 +408,7 @@ class TransformerLM:
         B, S = tokens.shape
         x = L.embed(cfg, params, tokens, part)
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
-        x, new_cache, _ = self._run_layers(
+        x, new_cache, _, _ = self._run_layers(
             params, x, positions, state["cache"], jnp.zeros((), jnp.int32),
             img_kv=state.get("img_kv"), img_mask=state.get("img_mask"))
         x = L.apply_norm(cfg, params, "ln_f", x)
@@ -503,7 +527,7 @@ class TransformerLM:
         valid = (jnp.arange(C, dtype=jnp.int32) < length)[None, :]
         page_row = jax.lax.dynamic_slice_in_dim(
             state["page_map"], row, 1, axis=0)            # (1, np)
-        x, new_cache, _ = self._run_layers(
+        x, new_cache, _, _ = self._run_layers(
             params, x, positions, state["cache"], None,
             page_map=page_row, write_valid=valid)
         x = L.apply_norm(cfg, params, "ln_f", x)

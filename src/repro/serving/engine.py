@@ -81,18 +81,29 @@ class Request:
     img_mask: Optional[np.ndarray] = None  # (I,) bool
 
 
-def supports_continuous(cfg: ModelConfig) -> Optional[str]:
+def supports_continuous(cfg: ModelConfig,
+                        max_seq: Optional[int] = None) -> Optional[str]:
     """None when ``cfg`` can run the slot-level scheduler, else the reason
     it can't (cfg-only, so ``make_engine`` decides before building params).
     VLM states are slot-wired (img_kv/img_mask splice in
     ``TransformerLM.insert_slot``), and int8 KV caches (``kv_quant``) are
     continuous too — ``insert_slot`` splices the quantized values AND
     their per-(token, head) scales, and decode scatters per-slot writes
-    into the int8 buffers — so neither falls back any more."""
+    into the int8 buffers — so neither falls back any more.
+
+    Sliding-window archs (Mixtral) allocate a ring cache only when the
+    served extent reaches the window (``init_cache``: T = min(max_seq,
+    window)); serving with ``max_seq`` STRICTLY below the window keeps the
+    cache linear, so the slot scheduler — and with it continuous MoE
+    serving with applied expert migrations — applies.  Callers that don't
+    know the extent yet (``max_seq=None``) get the conservative reject."""
     if cfg.family in ("ssm", "hybrid"):
         return f"{cfg.family} archs have no prefill_bucketed/insert_slot API"
-    if cfg.sliding_window:
-        return "continuous batching needs a linear KV cache, not a ring"
+    if cfg.sliding_window and (max_seq is None
+                               or max_seq >= cfg.sliding_window):
+        return ("continuous batching needs a linear KV cache, not a ring; "
+                f"serve with max_seq < sliding_window "
+                f"({cfg.sliding_window}) to keep the cache linear")
     return None
 
 
@@ -136,6 +147,16 @@ class _EngineBase:
         self.model = build_model(cfg, tp=tp, part=part or NULL,
                                  use_kernel=use_kernel)
         self.params = self.model.init(jax.random.PRNGKey(seed))
+        if cfg.is_moe and isinstance(self.params.get("layers"), dict) \
+                and "moe" in self.params["layers"]:
+            # identity physical-expert maps: expert migrations permute the
+            # weight rows AND these maps; the combine scatters rows back to
+            # logical order (models.moe), so installing identity here is a
+            # bit-exact no-op until the first expert migration
+            from repro.models.moe import expert_identity
+            own, sh = expert_identity(cfg.n_experts, cfg.n_layers)
+            self.params["layers"]["moe"] = dict(
+                self.params["layers"]["moe"], owner=own, share=sh)
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self._rid = 0
@@ -155,10 +176,20 @@ class _EngineBase:
         # pricing dims (d_model).  "columns" keeps the old aggregate lift
         # at cost_cfg's layer count.
         n_l = cfg.n_layers if layer_mode == "graph" else ccfg.n_layers
+        # MoE archs: the controller places per-expert blocks (router-load-
+        # weighted compute, weight-only migration bytes) when the expert
+        # count tiles the mesh; otherwise the cost model stays expert-
+        # oblivious (dense ffn block) rather than emitting perms that
+        # cannot be physically applied to the weight stacks.
+        n_exp = cfg.n_experts if (cfg.is_moe and cfg.n_experts >= 2
+                                  and cfg.n_experts
+                                  % self.net.n_devices == 0) else 0
         self.cost = CostModel(d_model=ccfg.d_model, n_heads=max(cfg.n_heads, 1),
                               L0=8, n_layers=max(n_l, 1), lam=lam,
                               compute_mode="incremental",
                               layer_mode=layer_mode,
+                              n_experts=n_exp,
+                              d_ff=(ccfg.d_ff if n_exp else 0),
                               page_size=max(0, int(cost_page_size)))
         # KV-group size: GQA stacks migrate whole groups (query heads move
         # with their shared KV head), so the controller emits
@@ -338,14 +369,57 @@ class _EngineBase:
         return state, False, \
             "per-layer plan on a cache without a leading layer axis"
 
+    def _feed_expert_loads(self, states: Sequence[Dict[str, Any]]):
+        """Average the decode states' router-load EWMAs ((L, E) routed-token
+        fractions), normalize rows to sum 1, and hand them to the
+        controller's expert cost model — the live-load feedback edge of the
+        expert block graph.  No-op for expert-oblivious cost models."""
+        if not self.cost.n_experts:
+            return
+        loads = [np.asarray(st["expert_load"]) for st in states
+                 if isinstance(st, dict) and "expert_load" in st]
+        if not loads:
+            return
+        rows = np.mean(loads, axis=0)
+        rows = rows / np.maximum(rows.sum(axis=-1, keepdims=True), 1e-9)
+        self.controller.update_expert_loads(rows)
+
+    def _migrate_experts(self, plan) -> tuple:
+        """Execute the plan's expert migrations physically: permute the
+        w_gate/w_up/w_down expert rows (and the owner/share maps that ride
+        with them) by the per-layer relative permutations — weight-only,
+        exactly as head migrations permute cache rows.  Params are shared
+        across decode states, so this runs ONCE per plan.  Returns
+        (applied, reason)."""
+        if plan.get("prev_expert_perms") is None \
+                or not plan.get("expert_migrations"):
+            return False, None
+        moe = self.params.get("layers", {})
+        if not (isinstance(moe, dict) and "moe" in moe
+                and "owner" in moe["moe"]):
+            return False, "params carry no physical expert rows"
+        from repro.core.placement_bridge import (
+            permute_model_experts_layers, relative_perms)
+        rel = relative_perms(plan["prev_expert_perms"], plan["expert_perms"])
+        L = int(moe["moe"]["owner"].shape[0])
+        if rel.shape[0] == 1:
+            rel = np.broadcast_to(rel, (L, rel.shape[1]))
+        if rel.shape[0] != L:
+            return False, ("expert plan rows do not match the stacked "
+                           "expert weights")
+        self.params = permute_model_experts_layers(self.params, rel)
+        return True, None
+
     def _interval(self, state, tau_tokens: Optional[int] = None):
         """The paper's controller interval: observe -> Algorithm 1 ->
-        migrate head shards in the decode gap."""
+        migrate head shards (and expert weight rows) in the decode gap."""
+        self._feed_expert_loads([state])
         plan = self._interval_plan(tau_tokens)
         applied, reason = False, None
         if plan["migrations"]:
             state, applied, reason = self._migrate_state(state, plan)
-        self._log_interval(plan, applied, reason)
+        e_applied, e_reason = self._migrate_experts(plan)
+        self._log_interval(plan, applied, reason, e_applied, e_reason)
         return state
 
     # ------------------------------------------------- migration pricing
@@ -374,14 +448,33 @@ class _EngineBase:
                 jnp.dtype(self.cfg.dtype).itemsize
         return int(len(kv_moves) * hd.rep * per_row)
 
-    def _log_interval(self, plan, applied: bool, reason: Optional[str]):
+    def _expert_migration_bytes(self, pairs) -> int:
+        """Bytes the plan's expert migrations move: 3·D·F weights per
+        distinct migrated (layer, expert row) — weight-only, no KV term
+        (Table I's expert column; the paper's m_i for experts)."""
+        if not pairs:
+            return 0
+        moves = {(l, e) for (l, e, _s, _d) in pairs}
+        D = self.cfg.d_model
+        F = self.cfg.d_ff or 4 * D
+        per = 3 * D * F * jnp.dtype(self.cfg.param_dtype).itemsize
+        return int(len(moves) * per)
+
+    def _log_interval(self, plan, applied: bool, reason: Optional[str],
+                      expert_applied: bool = False,
+                      expert_reason: Optional[str] = None):
+        epairs = plan.get("expert_migrations") or []
         self.migration_log.append({
             "step": self.decode_steps,
             "n_migrations": len(plan["migrations"]),
             "mig_bytes": self._migration_bytes(plan["migrations"]),
+            "n_expert_migrations": len(epairs),
+            "expert_mig_bytes": self._expert_migration_bytes(epairs),
             "d_mig_est": plan["d_mig_est"],
             "d_pipe_est": plan.get("d_pipe_est"),
-            "applied": applied, "reason": reason})
+            "applied": applied, "reason": reason,
+            "expert_applied": expert_applied,
+            "expert_reason": expert_reason})
 
 
 class ServingEngine(_EngineBase):
@@ -420,8 +513,10 @@ class ServingEngine(_EngineBase):
                  img_tokens: int = 16, paged: bool = False,
                  page_size: int = 64, kv_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None, **kw):
-        reason = supports_continuous(cfg)   # cheap cfg-only check BEFORE
-        if reason is not None:              # params/controller are built
+        # cheap cfg-only check BEFORE params/controller are built; the
+        # served extent decides whether a sliding-window arch stays linear
+        reason = supports_continuous(cfg, kw.get("max_seq", 512))
+        if reason is not None:
             raise UnsupportedArchError(reason + "; use WaveServingEngine")
         self.paged = bool(paged)
         if self.paged:
@@ -802,6 +897,9 @@ class ServingEngine(_EngineBase):
         # matching wall-clock token output (the τ anchor itself is already
         # token-denominated via _occupancy)
         if self.decode_steps % (self.lam * self.pipeline_k) == 0:
+            # live router loads first: this interval's expert placement is
+            # priced by the decode stream's gate frequencies, not the prior
+            self._feed_expert_loads(self.states)
             plan = self._interval_plan(tau_tokens=self._occupancy())
             applied, reason = False, None
             if plan["migrations"]:
@@ -812,8 +910,11 @@ class ServingEngine(_EngineBase):
                 # weights/caches now sit in the plan's layout; the kernel
                 # gather maps must follow the same source of truth
                 self._phys_perms = plan["perms"]
+            # expert rows are weight-only state shared by all groups:
+            # permute them exactly once per plan
+            e_applied, e_reason = self._migrate_experts(plan)
             self._refresh_head_rows(plan)
-            self._log_interval(plan, applied, reason)
+            self._log_interval(plan, applied, reason, e_applied, e_reason)
         return True
 
     def run(self, max_steps: int = 10_000):

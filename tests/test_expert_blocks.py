@@ -1,0 +1,219 @@
+"""Expert-level block graph: collapse equivalence of the cost/delay model,
+physical expert migration/replication invariance of the model function,
+and the end-to-end expert-migration roundtrip through the serving engine.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.paper_setup import layered_cost, layered_net
+from repro.core.blocks import make_blocks, replicate_placement
+from repro.core.delay import (inference_delay, pipelined_inference_delay,
+                              resource_busy_times)
+from repro.core.network import DeviceNetwork
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+
+# --------------------------------------------------- block-set identities
+def test_single_expert_blocks_are_dense_blocks():
+    """n_experts of 0 or 1 emits the identical dense list — a 1-expert
+    MoE *is* an ffn as far as placement is concerned."""
+    assert make_blocks(8, 3, 1) == make_blocks(8, 3)
+    assert make_blocks(8, 3, 0) == make_blocks(8, 3)
+
+
+@pytest.mark.parametrize("n_experts", [4, 8])
+def test_uniform_experts_collapse_to_dense_delay(n_experts):
+    """Uniform router load + co-located experts price the expert graph
+    bit-for-bit equal to the dense ffn graph (power-of-two E makes the
+    1/E load split binary-exact), under the full per-layer delay model."""
+    net = layered_net(seed=3)
+    dense_cost = layered_cost()
+    moe_cost = layered_cost(n_experts=n_experts)
+    dense_blocks = dense_cost.make_blocks()
+    moe_blocks = moe_cost.make_blocks()
+
+    rng = np.random.default_rng(0)
+    col = rng.integers(0, net.n_devices, len(make_blocks(8)))
+    dense_place = replicate_placement(col, dense_blocks)
+    moe_place = replicate_placement(col, moe_blocks)  # experts -> ffn slot
+
+    for tau in (1, 17):
+        d = inference_delay(dense_place, dense_blocks, dense_cost, net, tau)
+        m = inference_delay(moe_place, moe_blocks, moe_cost, net, tau)
+        assert d == m
+        dp = pipelined_inference_delay(dense_place, dense_blocks, dense_cost,
+                                       net, tau, k=4)
+        mp = pipelined_inference_delay(moe_place, moe_blocks, moe_cost,
+                                       net, tau, k=4)
+        assert dp == mp
+        d_dev, d_link = resource_busy_times(dense_place, dense_blocks,
+                                            dense_cost, net, tau)
+        m_dev, m_link = resource_busy_times(moe_place, moe_blocks,
+                                            moe_cost, net, tau)
+        np.testing.assert_array_equal(d_dev, m_dev)
+        assert d_link == m_link
+
+
+# --------------------------------------- model-function invariance (unit)
+def _tiny_moe():
+    from repro.models.moe import expert_identity, init_moe
+    from tests.conftest import reduced_config
+
+    cfg = reduced_config("mixtral-8x7b")
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    p["owner"], p["share"] = expert_identity(cfg.n_experts)
+    return cfg, p
+
+
+def _permute_moe(p, perm):
+    idx = jnp.asarray(perm)
+    out = dict(p)
+    for n in ("w_gate", "w_up", "w_down"):
+        out[n] = jnp.take(p[n], idx, axis=0)
+    for n in ("owner", "share"):
+        out[n] = jnp.take(p[n], idx, axis=-1)
+    return out
+
+
+def test_expert_permutation_preserves_logits_exactly():
+    """A physical expert-row permutation with its owner/share maps leaves
+    moe_block output BIT-identical: the one-hot combine gathers the same
+    per-expert terms back into logical order before the gate reduction."""
+    from repro.models.moe import moe_block
+    from repro.models.partitioning import NULL
+
+    cfg, p = _tiny_moe()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, cfg.d_model),
+                          jnp.float32)
+    ref, _, freq = moe_block(cfg, p, x, NULL)
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        perm = rng.permutation(cfg.n_experts)
+        out, _, freq2 = moe_block(cfg, _permute_moe(p, perm), x, NULL)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+        # the router-load signal is logical — invariant under re-layout
+        assert np.array_equal(np.asarray(freq), np.asarray(freq2))
+
+
+def test_expert_replication_preserves_logits_exactly():
+    """Activating a replica splits the gate share exactly in half across
+    the two physical copies of identical weights: 0.5·y + 0.5·y == y in
+    binary fp, so the output is bit-identical."""
+    from repro.models.moe import moe_block, replicate_expert
+    from repro.models.partitioning import NULL
+
+    cfg, p = _tiny_moe()
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 5, cfg.d_model),
+                          jnp.float32)
+    ref, _, _ = moe_block(cfg, p, x, NULL)
+    for e in range(cfg.n_experts):
+        p2 = replicate_expert(p, e)
+        assert p2["w_gate"].shape[0] == cfg.n_experts + 1
+        out, _, _ = moe_block(cfg, p2, x, NULL)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(seed=st.integers(0, 10_000), n_rep=st.integers(0, 2))
+    @settings(max_examples=15, deadline=None)
+    def test_migration_replication_compose_exactly(seed, n_rep):
+        """Any composition of replications followed by a physical row
+        permutation preserves moe_block output bit-for-bit — the invariant
+        the serving engine relies on when it applies controller plans to
+        the live weights."""
+        from repro.models.moe import moe_block, replicate_expert
+        from repro.models.partitioning import NULL
+
+        cfg, p = _tiny_moe()
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(1, 4, cfg.d_model)), jnp.float32)
+        ref, _, _ = moe_block(cfg, p, x, NULL)
+        p2 = p
+        for _ in range(n_rep):
+            p2 = replicate_expert(p2, int(rng.integers(cfg.n_experts)))
+        p2 = _permute_moe(p2, rng.permutation(p2["w_gate"].shape[0]))
+        out, _, _ = moe_block(cfg, p2, x, NULL)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+except ImportError:  # hypothesis is a dev-only dependency
+    pass
+
+
+# ------------------------------------------------- VLM supergroup perms
+def test_apply_layer_head_perms_multidim_leading():
+    """Satellite: ``perms`` with multiple leading index dims — (G, R, H)
+    over a supergroup cache stack (G, R, B, T, H, dh) — permutes each
+    leading cell independently (the per-layer VLM migration path)."""
+    from repro.core.placement_bridge import apply_layer_head_perms
+
+    G, R, B, T, H, dh = 2, 3, 2, 4, 4, 3
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(G, R, B, T, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(G, R, B, T, H, dh)), jnp.float32)
+    perms = np.stack([[rng.permutation(H) for _ in range(R)]
+                      for _ in range(G)])                      # (G, R, H)
+    k2, v2 = apply_layer_head_perms(k, v, perms, layer_axis=0, head_axis=-2)
+    assert k2.shape == k.shape
+    for g in range(G):
+        for r in range(R):
+            np.testing.assert_array_equal(
+                np.asarray(k2[g, r]), np.asarray(k[g, r][:, :, perms[g, r]]))
+            np.testing.assert_array_equal(
+                np.asarray(v2[g, r]), np.asarray(v[g, r][:, :, perms[g, r]]))
+
+
+# --------------------------------------------- engine roundtrip (e2e)
+def _tiny_mixtral_cfg():
+    from repro.configs import get_config
+    return get_config("mixtral-8x7b").with_overrides(
+        n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_head=8,
+        d_ff=64, vocab_size=97, sliding_window=64,
+        dtype="float32", param_dtype="float32")
+
+
+def test_expert_migration_roundtrip_through_engine():
+    """End-to-end: mixtral (reduced) streams through the continuous
+    ServingEngine; a straggler on the expert-heavy device forces the
+    controller to physically permute the expert weight rows mid-serve
+    (no silent skip — the log reports applied expert migrations) and the
+    generated streams equal a migration-free run bit-for-bit."""
+    from repro.serving.engine import ServingEngine
+
+    cfg = _tiny_mixtral_cfg()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, size=n) for n in (5, 11, 8, 14, 6)]
+
+    def run(lam, straggle_at):
+        eng = ServingEngine(cfg, n_slots=2, max_seq=48, lam=lam, seed=0,
+                            net=DeviceNetwork.sample(2, seed=1))
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=10 + 3 * (i % 2))
+        while True:
+            if straggle_at is not None and eng.decode_steps == straggle_at:
+                place = eng.controller.place
+                counts = np.zeros(eng.net.n_devices)
+                for bl in eng.controller.blocks:
+                    if bl.kind == "expert":
+                        counts[int(place[bl.index])] += 1
+                eng.net.inject_straggler(int(counts.argmax()),
+                                         slowdown=500.0)
+            if not eng.step():
+                break
+        return {r.rid: r.out_tokens for r in eng.finished}, eng
+
+    with_mig, eng = run(3, straggle_at=4)
+    without, _ = run(10 ** 9, None)
+    assert with_mig == without and len(with_mig) == 5
+    applied = [e for e in eng.migration_log
+               if e["expert_applied"] and e["n_expert_migrations"]]
+    assert applied, "expert migration silently skipped"
+    assert all(e["expert_reason"] is None for e in applied)
+    assert all(e["expert_mig_bytes"] > 0 for e in applied)
+    # the weights were PHYSICALLY re-laid-out, owner maps moved with them
+    owner = np.asarray(eng.params["layers"]["moe"]["owner"])
+    assert not np.array_equal(owner,
+                              np.tile(np.arange(cfg.n_experts), (2, 1)))
