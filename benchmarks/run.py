@@ -14,9 +14,12 @@ Prints ``name,us_per_call,derived`` CSV.
 ran is compared against ``BASELINE_DIR/BENCH_<group>.json``.  A row fails
 when its latency (``us_per_call``, lower is better) regresses by more
 than ``--check-tol`` (default 15%), or a throughput-like derived metric
-(``tok_s`` / ``x_*`` / ``speedup``, higher is better) or a quality ratio
-(``ratio_to_exact``, lower is better) regresses by the same margin;
-improvements always pass.  The row SETS must match exactly, both ways:
+(``tok_s`` / ``x_*`` / ``speedup`` / ``goodput``, higher is better), a
+quality ratio (``ratio_to_exact``, lower is better), or a latency
+percentile (``p50_``/``p95_``/``p99_``-prefixed, lower is better —
+virtual-clock deterministic, so gated at the strict tolerance, with the
+failure message naming the row's offered load) regresses by the same
+margin; improvements always pass.  The row SETS must match exactly, both ways:
 baseline rows missing from the fresh run fail (coverage loss), and fresh
 rows absent from the baseline fail too — an unmatched new row would
 otherwise run ungated forever, silently passing whatever it measures.
@@ -41,6 +44,7 @@ MODULES = [
     ("kernels", "benchmarks.kernel_bench"),             # per-kernel
     ("kernel_decode", "benchmarks.kernel_decode"),      # resident vs padded
     ("moe_serving", "benchmarks.moe_serving"),          # expert-aware place
+    ("serving_load", "benchmarks.serving_load"),        # tail latency vs load
     ("roofline", "benchmarks.roofline"),                # deliverable (g)
 ]
 
@@ -48,8 +52,14 @@ MODULES = [
 # better (prefix, not substring, so e.g. a future max_err/idx_miss cannot
 # be misclassified).  Unlisted keys (roofline bytes, grid_rows, ...) are
 # not gated.
-HIGHER_BETTER = ("tok_s", "x_", "speedup")
+HIGHER_BETTER = ("tok_s", "x_", "speedup", "goodput")
 LOWER_BETTER = ("ratio_to_exact",)
+# Latency percentiles (p50_ttft, p95_itl, ...): lower is better, and the
+# serving_load sweep computes them on a VIRTUAL clock (scheduler steps,
+# not wall seconds), so they are machine-independent and gate at the
+# STRICT tolerance.  Never emit wall-clock percentiles under these
+# prefixes — they would inherit the strict gate.
+PCTL_LOWER = ("p50_", "p95_", "p99_")
 # Derived metrics that are RATIOS OF WALL TIMES from one run (e.g. the
 # kernel_decode resident-vs-padded speedup): same-machine, but the part
 # above the structural work ratio is interpreter/overhead-sensitive, so
@@ -85,6 +95,8 @@ def _gated_metrics(row: dict):
     gated = [(k, v, True) for k, v in derived.items()
              if k.startswith(HIGHER_BETTER)]
     gated += [(k, v, False) for k, v in derived.items() if k in LOWER_BETTER]
+    gated += [(k, v, False) for k, v in derived.items()
+              if k.startswith(PCTL_LOWER)]
     if not gated:
         gated = [("us_per_call", float(row["us_per_call"]), False)]
     yield from gated
@@ -142,12 +154,20 @@ def check_group(key: str, fresh_rows: list, baseline_dir: str,
             t = wall_tol if metric == "us_per_call" \
                 or metric in WALL_RATIO else tol
             val = fm[metric]
+            # tail-latency regressions are only interpretable next to the
+            # load that produced them — print the row's offered load
+            ctx = ""
+            if metric.startswith(PCTL_LOWER):
+                off = parse_derived(frow.get("derived", "")) \
+                    .get("offered_load")
+                if off is not None:
+                    ctx = f" [at offered_load={off:.3g} req/step]"
             if higher and val < base_val * (1 - t):
                 fails.append(f"{name}: {metric} {val:.3g} < baseline "
-                             f"{base_val:.3g} - {t:.0%}")
+                             f"{base_val:.3g} - {t:.0%}{ctx}")
             elif not higher and val > base_val * (1 + t):
                 fails.append(f"{name}: {metric} {val:.3g} > baseline "
-                             f"{base_val:.3g} + {t:.0%}")
+                             f"{base_val:.3g} + {t:.0%}{ctx}")
     return fails
 
 

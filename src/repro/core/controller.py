@@ -150,13 +150,22 @@ class IntervalController:
                 amortize=self.cfg.amortize, min_gain=self.cfg.min_gain)
 
     # ------------------------------------------------------------- decide
-    def step_interval(self, tau: Optional[int] = None) -> dict:
+    def step_interval(self, tau: Optional[int] = None,
+                      arrival_rate: Optional[float] = None,
+                      queue_depth: Optional[int] = None) -> dict:
         """One controller interval: assign, diff, plan migrations.
 
         ``tau`` lets the serving engine anchor the cost model to the
         *actual* decode stream — e.g. the mean KV-cache occupancy across
         continuous-batching slots (which sit at different depths) — instead
-        of the lock-step +1-per-interval counter the simulator uses."""
+        of the lock-step +1-per-interval counter the simulator uses.
+
+        ``arrival_rate`` (requests per scheduler step since the last
+        interval) and ``queue_depth`` (backlog at the interval boundary)
+        are the engine's observed LOAD — recorded into the plan and
+        history so the controller's view covers the arrival process, not
+        just resident occupancy.  Today they are telemetry; they are the
+        input the traffic-adaptive search (ROADMAP) will act on."""
         self.tau = max(1, int(tau)) if tau is not None else self.tau + 1
         prev = self.place
         k = self.cfg.pipeline_k
@@ -211,6 +220,8 @@ class IntervalController:
                 "d_mig_est": d_mig,
                 "d_pipe_est": pipelined_inference_delay(
                     place, self.blocks, self.cost, self.net, self.tau, k=k),
+                "arrival_rate": arrival_rate,
+                "queue_depth": queue_depth,
                 "infeasible": stats.infeasible}
         self.place, self.perms = place, new_perms
         if new_eperms is not None:
@@ -218,6 +229,8 @@ class IntervalController:
         self.history.append({"tau": self.tau, "n_migrations": len(pairs),
                              "n_expert_migrations": len(epairs),
                              "d_mig_est": d_mig,
+                             "arrival_rate": arrival_rate,
+                             "queue_depth": queue_depth,
                              "infeasible": stats.infeasible})
         return plan
 

@@ -26,13 +26,19 @@ class SlotTelemetry:
 
 class HeartbeatMonitor:
     """Tracks per-slot liveness + step-time EWMA; estimates effective
-    compute availability for the controller."""
+    compute availability for the controller.
+
+    ``clock`` injects the time source (default wall clock): the async
+    serving runtime's tests drive hang detection on a virtual clock, so
+    "worker silent past the timeout" is provable without real sleeps."""
 
     def __init__(self, n_slots: int, *, window: int = 16,
                  straggler_factor: float = 1.5,
-                 heartbeat_timeout: float = 60.0):
+                 heartbeat_timeout: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
         self.slots: Dict[int, SlotTelemetry] = {
-            j: SlotTelemetry(deque(maxlen=window), time.monotonic())
+            j: SlotTelemetry(deque(maxlen=window), self._clock())
             for j in range(n_slots)}
         self.straggler_factor = straggler_factor
         self.heartbeat_timeout = heartbeat_timeout
@@ -41,16 +47,18 @@ class HeartbeatMonitor:
         self.events: Deque[dict] = deque(maxlen=4096)
 
     def record_event(self, kind: str, **info):
-        self.events.append({"kind": kind, "t": time.monotonic(), **info})
+        self.events.append({"kind": kind, "t": self._clock(), **info})
 
     def record_step(self, slot: int, seconds: float):
         t = self.slots[slot]
         t.step_times.append(seconds)
-        t.last_heartbeat = time.monotonic()
+        t.last_heartbeat = self._clock()
         t.alive = True
 
     def record_heartbeat(self, slot: int):
-        self.slots[slot].last_heartbeat = time.monotonic()
+        t = self.slots[slot]
+        t.last_heartbeat = self._clock()
+        t.alive = True      # a heartbeat revives a hang-flagged slot
 
     # ------------------------------------------------------------- queries
     def median_step(self) -> float:
@@ -67,9 +75,26 @@ class HeartbeatMonitor:
                 > self.straggler_factor * med]
 
     def dead(self) -> List[int]:
-        now = time.monotonic()
+        now = self._clock()
         return [j for j, t in self.slots.items()
                 if now - t.last_heartbeat > self.heartbeat_timeout]
+
+    def sweep_hung(self) -> List[int]:
+        """One-shot hang sweep (the async runtime's worker watchdog):
+        slots silent past ``heartbeat_timeout`` transition to dead exactly
+        once — the transition (not every poll) lands in the event log, and
+        ``availability`` zeroes the slot until a heartbeat revives it.
+        Returns the slots that newly transitioned this sweep."""
+        now = self._clock()
+        newly: List[int] = []
+        for j, t in self.slots.items():
+            silent = now - t.last_heartbeat
+            if silent > self.heartbeat_timeout and t.alive:
+                t.alive = False
+                newly.append(j)
+                self.record_event("worker_hung", slot=j,
+                                  silent_s=float(silent))
+        return newly
 
     def availability(self, peak_flops: float) -> np.ndarray:
         """C_j(τ) estimates for Algorithm 1: peak scaled by the inverse of

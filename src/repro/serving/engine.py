@@ -46,7 +46,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Deque, Dict, List, Optional, Sequence
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -160,6 +160,18 @@ class _EngineBase:
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self._rid = 0
+        # per-token stream hook: ``token_sink(req, tok, done)`` fires on
+        # every generated token (done=False) and once at retire
+        # (tok=None, done=True) — the async runtime routes these into
+        # per-request streams and the workload driver timestamps them.
+        # Purely observational: None (the default) changes nothing.
+        self.token_sink: Optional[Callable[[Request, Optional[int], bool],
+                                           None]] = None
+        # load-signal marks: arrivals/steps since the last interval, so
+        # the controller sees the observed arrival rate (requests per
+        # scheduler step) and queue depth, not just slot occupancy.
+        self._load_mark_step = 0
+        self._load_mark_rid = 0
         # controller wiring (the paper's technique in the serving loop).
         # The controller's cost model can use the FULL production dims
         # (cost_cfg) while a reduced model serves on CPU — the placement
@@ -267,24 +279,53 @@ class _EngineBase:
         return np.asarray(jax.random.categorical(self._next_sample_key(),
                                                  logits))
 
+    # -------------------------------------------------------------- streaming
+    def _emit_token(self, req: Request, tok: int):
+        """Append one generated token and fire the stream hook — the ONE
+        place tokens enter a request, so every scheduler path (admission
+        sample, decode step, wave loop) streams identically."""
+        req.out_tokens.append(tok)
+        if self.token_sink is not None:
+            self.token_sink(req, tok, False)
+
+    def _emit_done(self, req: Request):
+        if self.token_sink is not None:
+            self.token_sink(req, None, True)
+
     # ------------------------------------------------------------- telemetry
     def _record_step(self, dt: float):
         for j in range(self.net.n_devices):
             self.monitor.record_step(j, dt)
+
+    def _load_signal(self) -> tuple:
+        """(observed arrival rate, queue depth) since the last interval:
+        arrivals per *scheduler step* — clock-free, so it is identical on
+        virtual and wall clocks — plus the current backlog.  Resets the
+        marks, so each interval reports its own window."""
+        steps = self.decode_steps - self._load_mark_step
+        arrived = self._rid - self._load_mark_rid
+        self._load_mark_step = self.decode_steps
+        self._load_mark_rid = self._rid
+        return arrived / max(steps, 1), len(self.queue)
 
     # --------------------------------------------------------------- interval
     def _interval_plan(self, tau_tokens: Optional[int] = None) -> dict:
         """Observe -> Algorithm 1: one migration plan per interval.
         ``tau_tokens`` anchors the cost model to the observed decode stream
         (mean slot occupancy, in tokens — in-flight depth never changes
-        this conversion, only the *cadence* at which intervals fire)."""
+        this conversion, only the *cadence* at which intervals fire).
+        The observed arrival rate and queue depth ride along into the
+        interval record, so the controller sees LOAD, not just occupancy
+        (the honest signal traffic-adaptive search will consume)."""
         self.net.step_background_load()
         self.controller.observe(compute_avail=self.net.compute_avail)
         tau = None
         if tau_tokens is not None:
             tau = max(1, round((tau_tokens - self.cost.L0)
                                / max(self.cost.lam, 1)))
-        return self.controller.step_interval(tau=tau)
+        rate, depth = self._load_signal()
+        return self.controller.step_interval(tau=tau, arrival_rate=rate,
+                                             queue_depth=depth)
 
     def _migrate_state(self, state, plan, permute_params: bool = True):
         """Execute ``plan`` physically on one decode state: permute weights
@@ -466,6 +507,8 @@ class _EngineBase:
         epairs = plan.get("expert_migrations") or []
         self.migration_log.append({
             "step": self.decode_steps,
+            "arrival_rate": plan.get("arrival_rate"),
+            "queue_depth": plan.get("queue_depth"),
             "n_migrations": len(plan["migrations"]),
             "mig_bytes": self._migration_bytes(plan["migrations"]),
             "n_expert_migrations": len(epairs),
@@ -718,6 +761,7 @@ class ServingEngine(_EngineBase):
                 self.states[g], jnp.int32(row),
                 jnp.asarray(self.allocators[g].page_map_row(row)),
                 jnp.int32(0))
+        self._emit_done(r)
 
     def _finish_check(self, slot: int):
         r = self.slots[slot]
@@ -760,7 +804,7 @@ class ServingEngine(_EngineBase):
             # to seed _next before the slot can decode
             tok = int(self._sample(logits)[0])
             self._next[s] = tok
-            r.out_tokens.append(tok)
+            self._emit_token(r, tok)
             self.admission_log.append({"step": self.decode_steps, "slot": s,
                                        "rid": r.rid, "bucket": Lb})
             self._finish_check(s)
@@ -802,7 +846,7 @@ class ServingEngine(_EngineBase):
         # to seed _next before the slot can decode
         tok = int(self._sample(logits)[0])
         self._next[s] = tok
-        r.out_tokens.append(tok)
+        self._emit_token(r, tok)
         self.admission_log.append({"step": self.decode_steps, "slot": s,
                                    "rid": r.rid, "bucket": C,
                                    "pages": len(pages)})
@@ -887,7 +931,7 @@ class ServingEngine(_EngineBase):
                 # rpr: ignore[RPR004] -- post-block_until_ready host read:
                 # the scheduler needs concrete tokens for retire/admit
                 tok = int(toks[s - lo])
-                self.slots[s].out_tokens.append(tok)
+                self._emit_token(self.slots[s], tok)
                 self._next[s] = tok
                 self._finish_check(s)
             self._record_step(dt)
@@ -956,13 +1000,14 @@ class WaveServingEngine(_EngineBase):
             for i, r in list(active.items()):
                 # rpr: ignore[RPR004] -- wave scheduler's finish check
                 # runs on host tokens; nxt is already device-synced
-                r.out_tokens.append(int(nxt[i]))
+                self._emit_token(r, int(nxt[i]))
                 if (len(r.out_tokens) >= r.max_new_tokens
                         or L0 + len(r.out_tokens) >= self.max_seq - 1):
                     r.done = True
                     r.t_done = time.monotonic()
                     self.finished.append(r)
                     del active[i]
+                    self._emit_done(r)
             if not active:
                 break
             t0 = time.monotonic()

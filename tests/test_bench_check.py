@@ -66,3 +66,55 @@ def test_metric_regression_still_fails(tmp_path):
     # improvements pass
     assert check_group("g", [_row("g/a", derived="tok_s=12.0")], d,
                        0.15, 0.15) == []
+
+
+# ----------------------------------------------- percentile latency gating
+PCTL = ("p50_ttft=2.00;p95_ttft=8.00;p99_ttft=20.00;"
+        "goodput=3.000;offered_load=0.450")
+
+
+def test_percentile_metrics_gate_lower_is_better(tmp_path):
+    d = _write_baseline(tmp_path, "load", [_row("load/a", derived=PCTL)])
+    # p99 up 50% -> regression; p50/p95 unchanged
+    worse = PCTL.replace("p99_ttft=20.00", "p99_ttft=30.00")
+    fails = check_group("load", [_row("load/a", derived=worse)],
+                        d, 0.15, 0.15)
+    assert len(fails) == 1 and "p99_ttft" in fails[0]
+    # lower percentiles are an improvement, never a failure
+    better = PCTL.replace("p99_ttft=20.00", "p99_ttft=5.00")
+    assert check_group("load", [_row("load/a", derived=better)],
+                       d, 0.15, 0.15) == []
+
+
+def test_percentile_failure_names_offered_load(tmp_path):
+    """A tail-latency number is meaningless without the load that drove
+    it — the failure message must carry the row's offered_load."""
+    d = _write_baseline(tmp_path, "load", [_row("load/a", derived=PCTL)])
+    worse = PCTL.replace("p95_ttft=8.00", "p95_ttft=80.00")
+    fails = check_group("load", [_row("load/a", derived=worse)],
+                        d, 0.15, 0.15)
+    assert any("offered_load=0.45" in f for f in fails)
+
+
+def test_percentiles_use_strict_tol_not_wall(tmp_path):
+    """Virtual-clock percentiles are deterministic: the wide wall
+    tolerance must NOT apply to them (a 40% p99 regression fails even
+    when wall rows are allowed 60%)."""
+    d = _write_baseline(tmp_path, "load", [_row("load/a", derived=PCTL)])
+    worse = PCTL.replace("p99_ttft=20.00", "p99_ttft=28.00")
+    fails = check_group("load", [_row("load/a", derived=worse)],
+                        d, 0.15, 0.60)
+    assert any("p99_ttft" in f for f in fails)
+
+
+def test_goodput_gates_higher_is_better(tmp_path):
+    d = _write_baseline(tmp_path, "load", [_row("load/a", derived=PCTL)])
+    worse = PCTL.replace("goodput=3.000", "goodput=2.000")
+    fails = check_group("load", [_row("load/a", derived=worse)],
+                        d, 0.15, 0.15)
+    assert any("goodput" in f for f in fails)
+    # offered_load itself is context, not a gated metric: a sweep point
+    # change shows up through the row SET, not a direction gate
+    shifted = PCTL.replace("offered_load=0.450", "offered_load=0.500")
+    assert check_group("load", [_row("load/a", derived=shifted)],
+                       d, 0.15, 0.15) == []
