@@ -1,0 +1,273 @@
+"""Elastic serving under device churn: kill / slow / rejoin devices
+mid-decode and measure what recovery costs.
+
+The engine scenarios run the REAL paged serving engine on an 8-device
+heterogeneous edge cluster (``paper_setup.layered_net`` links) under the
+seeded workload driver, injecting churn through ``drive_virtual``'s
+event hook at a moment the engine is provably mid-decode (asserted).
+Churn rows use the flat per-step clock (one step = one time unit, like
+``serving_load``); the ``elastic/priced`` row re-runs the churn-free
+workload with ``price_by_model`` — steps priced by the controller's own
+modeled per-token delay — and asserts the streams are unchanged by the
+pricing.  The recovery accounting below is priced with the same modeled
+delay.
+
+Hard assertions (the bench RAISES, CI fails closed):
+ - every churn scenario's surviving streams are BIT-IDENTICAL to the
+   churn-free run — evacuation + teacher-forced replay must never change
+   a token;
+ - client-visible tokens lost to a failure stay ≤ the per-slot in-flight
+   count at the failure (the engine's replay recovery loses zero);
+ - evacuation recovers in fewer simulated steps than the restart
+   baseline (below).
+
+Restart baseline (``runtime.elastic.elastic_restore`` semantics): tear
+down and re-provision EVERY placed block from the controller node's
+checkpoint, then regenerate the in-flight tokens.  Priced with the same
+cost model the evacuation plan is priced with: restore bytes transfer at
+the controller->device link rates, regeneration pays the same decode
+steps replay pays — but every in-flight token is re-emitted (client
+visible), whereas evacuation moves only the dead device's blocks
+peer-to-peer and replays with zero client-visible loss.
+``x_restart_vs_evac`` (gated, higher is better) is the step ratio.
+
+Simulator scenarios exercise the planning layers' churn on the paper's
+layered topology: a device failure at τ=20 (placements must evacuate)
+and a true mid-run ``join`` of a fresh strong device (the engine path is
+rejoin-only — physical slot geometry is fixed at construction).
+
+    PYTHONPATH=src python benchmarks/elastic_serving.py
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from benchmarks.paper_setup import (LAYERED_DEADLINE, layered_blocks,
+                                    layered_cost, layered_net)
+from repro.configs import get_config
+from repro.core import ALL_POLICIES, simulate
+from repro.serving.engine import ServingEngine
+from repro.serving.workload import drive_virtual, make_workload, offered_load
+
+MAX_SEQ = 64
+PAGE_SIZE = 8
+N_SLOTS = 4
+LAM = 8                  # controller interval: active during the run
+RATE = 0.25
+HORIZON = 120.0
+SEED = 11
+KILL, SLOW_DEV = 5, 3    # non-controller devices (net.controller == 0)
+T_CHURN, T_REJOIN = 25.0, 60.0
+SIM_TOKENS, SIM_TAU = 60, 20
+
+
+def elastic_cfg():
+    """8 MHA heads so the head-position space tiles the 8-device cluster
+    (one head per device: every failure loses live cache rows)."""
+    return get_config("llama3-8b").with_overrides(
+        n_layers=2, d_model=64, d_ff=128, n_heads=8, n_kv_heads=8,
+        d_head=8, vocab_size=97, dtype="float32", param_dtype="float32")
+
+
+def _engine(cfg):
+    return ServingEngine(cfg, n_slots=N_SLOTS, max_seq=MAX_SEQ, lam=LAM,
+                         seed=0, paged=True, page_size=PAGE_SIZE,
+                         net=layered_net(seed=0, n_devices=8))
+
+
+def _drive(cfg, reqs, events=None, priced=False):
+    eng = _engine(cfg)
+    t0 = time.monotonic()
+    m = drive_virtual(eng, reqs, events=events, price_by_model=priced)
+    wall = time.monotonic() - t0
+    if m["n_finished"] != len(reqs):
+        raise RuntimeError(f"elastic sweep must drain: "
+                           f"{m['n_finished']}/{len(reqs)} finished")
+    return eng, m, wall
+
+
+def _restart_cost(eng, plan) -> float:
+    """Restore-from-checkpoint bytes: every placed block re-transfers
+    from the controller node, priced exactly like the migration delay
+    (block bytes at τ-1 over the link rate, summed sequentially)."""
+    net, cost = eng.net, eng.cost
+    place = np.asarray(plan["place"])
+    tau = max(int(plan["tau"]), 2)
+    total = 0.0
+    for b in eng.controller.blocks:
+        j = int(place[b.index])
+        rate = net.bandwidth[net.controller, j]
+        if np.isfinite(rate):
+            total += cost.memory(b, tau - 1) / rate
+    return total
+
+
+def _recovery_comparison(eng, fail_info) -> dict:
+    """Evacuation-vs-restart accounting from the SAME failure snapshot."""
+    plan, rec = fail_info["plan"], eng.recovery_log[0]
+    step_delay = float(plan["d_pipe_est"])
+    if not (np.isfinite(step_delay) and step_delay > 0):
+        raise RuntimeError("post-evacuation placement has no finite "
+                           "per-token delay — evacuation did not recover")
+    evac_steps = math.ceil(plan["d_mig_est"] / step_delay) \
+        + rec["replay_steps"]
+    restart_steps = math.ceil(_restart_cost(eng, plan) / step_delay) \
+        + rec["replay_steps"]     # restart regenerates the same tokens
+    return {"evac_steps": evac_steps, "restart_steps": restart_steps,
+            "tokens_lost": rec["tokens_lost"],
+            "tokens_lost_restart": fail_info["inflight"],
+            "replay_steps": rec["replay_steps"],
+            "replayed_slots": rec["replayed_slots"],
+            "x_restart_vs_evac": restart_steps / max(evac_steps, 1)}
+
+
+def _sim_rows() -> list:
+    """Planning-layer churn on the paper's layered topology."""
+    blocks, cost = layered_blocks(), layered_cost()
+
+    def run(events):
+        pol = ALL_POLICIES["resource-aware"](blocks, cost,
+                                             deadline=LAYERED_DEADLINE)
+        net = layered_net(seed=0, horizon_tau=SIM_TOKENS + 50)
+        t0 = time.monotonic()
+        res = simulate(pol, blocks, cost, net, SIM_TOKENS, seed=100,
+                       events=events)
+        return res, time.monotonic() - t0
+
+    base, base_wall = run(None)
+    fail, fail_wall = run([(SIM_TAU, lambda net: net.fail(6))])
+    if any(s.infeasible for s in fail.steps[SIM_TAU:]):
+        raise RuntimeError("simulated failure left the policy infeasible "
+                           "on the layered topology")
+
+    def strong_join(net):
+        net.join(float(net.mem_capacity.max()),
+                 float(net.compute_max.max()),
+                 np.full(net.n_devices,
+                         float(np.median(net.bandwidth[
+                             np.isfinite(net.bandwidth)]))))
+
+    join, join_wall = run([(SIM_TAU, strong_join)])
+    lat = {"churnfree": base, "fail": fail, "join": join}
+    walls = {"churnfree": base_wall, "fail": fail_wall, "join": join_wall}
+    out = []
+    for name, res in lat.items():
+        total = res.total_latency
+        extra = ""
+        if name != "churnfree":
+            extra = f";lat_vs_churnfree={total / base.total_latency:.4f}"
+        out.append((f"elastic/sim_{name}",
+                    walls[name] / SIM_TOKENS * 1e6,
+                    f"tok_s={SIM_TOKENS / total:.4f}{extra}"))
+    return out
+
+
+def run(verbose: bool = True) -> dict:
+    cfg = elastic_cfg()
+    reqs = make_workload(rate=RATE, horizon=HORIZON, seed=SEED,
+                         vocab=cfg.vocab_size)
+    off = offered_load(reqs, HORIZON)
+    rows = []
+
+    _, m0, wall0 = _drive(cfg, reqs)
+    rows.append(("churnfree", m0, wall0, {}))
+
+    # ---- fail: kill a device mid-decode, survive via evac + replay
+    info: dict = {}
+
+    def kill(eng):
+        info["inflight"] = sum(len(eng.slots[s].out_tokens)
+                               for s in eng._active())
+        info["slots"] = len(eng._active())
+        info["plan"] = eng.fail_device(KILL)
+
+    eng, mf, wallf = _drive(cfg, reqs, events=[(T_CHURN, kill)])
+    if not info["slots"]:
+        raise RuntimeError("failure fired into an idle engine — the "
+                           "scenario must kill a device MID-decode")
+    if mf["streams"] != m0["streams"]:
+        raise RuntimeError("surviving streams diverged after the failure "
+                           "— recovery must be bit-identical")
+    cmp = _recovery_comparison(eng, info)
+    if cmp["tokens_lost"] > info["slots"]:
+        raise RuntimeError(
+            f"failure lost {cmp['tokens_lost']} client-visible tokens > "
+            f"the {info['slots']}-slot in-flight bound")
+    if not cmp["evac_steps"] < cmp["restart_steps"]:
+        raise RuntimeError(
+            f"evacuation ({cmp['evac_steps']} steps) must beat the "
+            f"restart baseline ({cmp['restart_steps']} steps)")
+    rows.append(("fail", mf, wallf, cmp))
+
+    # ---- slow: persistent straggler, controller migrates away
+    eng, ms, walls = _drive(
+        cfg, reqs, events=[(T_CHURN,
+                            lambda e: e.slow_device(SLOW_DEV, 8.0))])
+    if ms["streams"] != m0["streams"]:
+        raise RuntimeError("streams diverged under a slowdown — "
+                           "migrations must be invariant")
+    n_mig = sum(e["n_migrations"] for e in eng.migration_log)
+    rows.append(("slow", ms, walls, {"n_migrations": n_mig}))
+
+    # ---- rejoin: failure then the device returns (expansion plan)
+    def rejoin(eng):
+        eng.rejoin_device(KILL)
+
+    eng, mr, wallr = _drive(cfg, reqs,
+                            events=[(T_CHURN,
+                                     lambda e: e.fail_device(KILL)),
+                                    (T_REJOIN, rejoin)])
+    if mr["streams"] != m0["streams"]:
+        raise RuntimeError("streams diverged across fail+rejoin")
+    if [r["event"] for r in eng.recovery_log] != ["fail", "rejoin"]:
+        raise RuntimeError(f"unexpected recovery log: {eng.recovery_log}")
+    rows.append(("rejoin", mr, wallr, {}))
+
+    # ---- priced: model-delay step pricing must only re-time, not
+    # re-token (satellite of the churn refactor: recovery costs can be
+    # reported on the controller's own delay model)
+    _, mp, wallp = _drive(cfg, reqs, priced=True)
+    if mp["streams"] != m0["streams"]:
+        raise RuntimeError("price_by_model changed a token stream — "
+                           "pricing must be timing-only")
+    rows.append(("priced", mp, wallp, {}))
+
+    out = {"offered": off, "rows": rows, "sim": _sim_rows()}
+    if verbose:
+        print(f"{'row':<22} {'p50':>7} {'p95':>7} {'p99':>7} "
+              f"{'goodput':>8}  extra")
+        for name, m, _w, extra in rows:
+            ex = ";".join(f"{k}={v}" for k, v in extra.items())
+            print(f"elastic/{name:<14} {m['p50_ttft']:>7.2f} "
+                  f"{m['p95_ttft']:>7.2f} {m['p99_ttft']:>7.2f} "
+                  f"{m['goodput']:>8.4f}  {ex}")
+        for name, _us, metrics in out["sim"]:
+            print(f"{name:<22} {metrics}")
+    return out
+
+
+def rows():
+    """benchmarks.run driver hook: virtual-clock latency percentiles and
+    the recovery-step ratio are deterministic -> gated strictly;
+    us_per_call is wall -> loose."""
+    r = run(verbose=False)
+    for name, m, wall, extra in r["rows"]:
+        us = wall / max(m["steps"], 1) * 1e6
+        s = (f"p50_ttft={m['p50_ttft']:.2f};p95_ttft={m['p95_ttft']:.2f};"
+             f"p99_ttft={m['p99_ttft']:.2f};goodput={m['goodput']:.4f}")
+        if "x_restart_vs_evac" in extra:
+            s += (f";x_restart_vs_evac={extra['x_restart_vs_evac']:.3f};"
+                  f"tokens_lost={extra['tokens_lost']};"
+                  f"tokens_lost_restart={extra['tokens_lost_restart']};"
+                  f"replay_steps={extra['replay_steps']}")
+        if "n_migrations" in extra:
+            s += f";n_migrations={extra['n_migrations']}"
+        yield (f"elastic/{name}/r{RATE:g}", us, s)
+    yield from r["sim"]
+
+
+if __name__ == "__main__":
+    run()

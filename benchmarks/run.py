@@ -45,6 +45,7 @@ MODULES = [
     ("kernel_decode", "benchmarks.kernel_decode"),      # resident vs padded
     ("moe_serving", "benchmarks.moe_serving"),          # expert-aware place
     ("serving_load", "benchmarks.serving_load"),        # tail latency vs load
+    ("elastic_serving", "benchmarks.elastic_serving"),  # device churn
     ("roofline", "benchmarks.roofline"),                # deliverable (g)
 ]
 

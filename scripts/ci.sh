@@ -48,5 +48,5 @@ fi
 #    exporting BENCH_CHECK_TOL_WALL.
 export BENCH_CHECK_TOL_WALL="${BENCH_CHECK_TOL_WALL:-0.60}"
 python -m benchmarks.run \
-    --only small_scale,pipelined,kernel_decode,pipeline_search,paged_serving,moe_serving,serving_load,roofline \
+    --only small_scale,pipelined,kernel_decode,pipeline_search,paged_serving,moe_serving,serving_load,elastic_serving,roofline \
     --check benchmarks/baselines

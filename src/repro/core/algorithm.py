@@ -81,7 +81,8 @@ class ResourceAwareAssigner:
         comp_used = np.zeros(V)
 
         def assigned_ok(j) -> bool:
-            return (mem_used[j] <= net.mem_capacity[j] and
+            return (net.is_active(j) and
+                    mem_used[j] <= net.mem_avail[j] and
                     comp_used[j] <= net.compute_avail[j] * self.deadline)
 
         def do_place(i, j):
@@ -178,9 +179,13 @@ class ResourceAwareAssigner:
                                               stats, U):
                     return self._fail(stats, t0)
                 # retry on the freshly freed device set (permissive: the
-                # desperate path takes any device the aggregate check OKs)
+                # desperate path takes any ACTIVE device the aggregate
+                # check OKs — liveness is enforced even here, since this
+                # path skips the per-block score filter)
                 cand, _ = device_order(i)
                 for j in cand:
+                    if not net.is_active(j):
+                        continue
                     do_place(i, j)
                     if assigned_ok(j):
                         placed = True
@@ -212,7 +217,7 @@ class ResourceAwareAssigner:
     def _all_ok(self, place, mem_used, comp_used, net) -> bool:
         if (place < 0).any():
             return False
-        return bool(np.all(mem_used <= net.mem_capacity + 1e-9) and
+        return bool(np.all(mem_used <= net.mem_avail + 1e-9) and
                     np.all(comp_used <= net.compute_avail * self.deadline
                            + 1e-9))
 
@@ -227,13 +232,13 @@ class ResourceAwareAssigner:
         devices = [target] if target is not None else \
             list(np.argsort(mem_used))  # try least-loaded device first
         for j in devices:
-            if j is None:
+            if j is None or not net.is_active(j):
                 continue
             movable = [k for k in range(len(place)) if place[k] == j and k != i]
             movable.sort(key=lambda k: mem[k])
             moved: List[tuple[int, int]] = []
             for k in movable:
-                if (mem_used[j] + need_mem <= net.mem_capacity[j] and
+                if (mem_used[j] + need_mem <= net.mem_avail[j] and
                         comp_used[j] + need_comp
                         <= net.compute_avail[j] * self.deadline):
                     break
@@ -250,7 +255,7 @@ class ResourceAwareAssigner:
                 stats.migrations += 1
                 if stats.migrations > U:
                     return False
-            if (mem_used[j] + need_mem <= net.mem_capacity[j] and
+            if (mem_used[j] + need_mem <= net.mem_avail[j] and
                     comp_used[j] + need_comp
                     <= net.compute_avail[j] * self.deadline):
                 return True
@@ -266,16 +271,15 @@ class ResourceAwareAssigner:
 
     def _find_room(self, k: int, avoid: int, place, mem_used, comp_used,
                    mem, comp, net) -> Optional[int]:
-        V = net.n_devices
         best, best_slack = None, -np.inf
-        for j in range(V):
+        for j in net.active_ids:
             if j == avoid:
                 continue
-            if (mem_used[j] + mem[k] <= net.mem_capacity[j] and
+            if (mem_used[j] + mem[k] <= net.mem_avail[j] and
                     comp_used[j] + comp[k]
                     <= net.compute_avail[j] * self.deadline):
-                slack = (net.mem_capacity[j] - mem_used[j] - mem[k]) \
-                    / net.mem_capacity[j]
+                slack = (net.mem_avail[j] - mem_used[j] - mem[k]) \
+                    / net.mem_avail[j]
                 if slack > best_slack:
                     best, best_slack = j, slack
         return best
@@ -286,7 +290,7 @@ class ResourceAwareAssigner:
         blocks from each violated device (largest first) and re-place them."""
         progressed = False
         for j in range(net.n_devices):
-            while (mem_used[j] > net.mem_capacity[j] + 1e-9 or
+            while (mem_used[j] > net.mem_avail[j] + 1e-9 or
                    comp_used[j] > net.compute_avail[j] * self.deadline + 1e-9):
                 on_j = [k for k in range(len(place)) if place[k] == j]
                 if not on_j:
@@ -358,7 +362,8 @@ def stage_balanced_chain(blocks: Sequence[Block], cost: CostModel,
     devices)."""
     from repro.core.delay import memory_feasible
     g = graph_of(blocks)
-    L, V = g.n_layers, net.n_devices
+    L = g.n_layers
+    act = [int(j) for j in net.active_ids]  # chains only over live devices
     layer_comp = float(sum(cost.compute(b, tau) for b in g.layer_blocks(0)))
     # expert graphs: per-layer compute varies with the router load, so
     # stage compute is a prefix-sum range, not shares[s] x one layer
@@ -400,12 +405,13 @@ def stage_balanced_chain(blocks: Sequence[Block], cost: CostModel,
         return t
 
     best: Optional[tuple] = None
-    for start in range(V):
-        order, left = [start], set(range(V)) - {start}
+    for start in act:
+        order, left = [start], set(act) - {start}
         while left:
             nxt = max(left, key=lambda j: net.bandwidth[order[-1], j])
             order.append(nxt)
             left.remove(nxt)
+        n = len(order)
         speeds = net.compute_avail[order]
         shares = np.maximum(0, np.round(L * speeds / speeds.sum())).astype(int)
         while shares.sum() > L:
@@ -414,17 +420,17 @@ def stage_balanced_chain(blocks: Sequence[Block], cost: CostModel,
             shares[int(np.argmax(speeds * (shares > 0)))] += 1
         # walk boundary layers off the worst stage onto a chain neighbor
         for _ in range(rebalance_passes):
-            used = [s for s in range(V) if shares[s] > 0]
+            used = [s for s in range(n) if shares[s] > 0]
             times = {s: stage_time(order, shares, s) for s in used}
             worst = max(used, key=lambda s: times[s])
             moved = False
             for nb in (worst - 1, worst + 1):
-                if not (0 <= nb < V):
+                if not (0 <= nb < n):
                     continue
                 trial = shares.copy()
                 trial[worst] -= 1
                 trial[nb] += 1
-                t_used = [s for s in range(V) if trial[s] > 0]
+                t_used = [s for s in range(n) if trial[s] > 0]
                 t_worst = max(stage_time(order, trial, s) for s in t_used)
                 if t_worst < times[worst] - 1e-15:
                     shares, moved = trial, True
@@ -464,7 +470,7 @@ def refine_bottleneck(prev: Optional[np.ndarray], place: np.ndarray,
     ``place``'s, so callers keep the rescoring policy's guarantees."""
     from repro.core.delay import bottleneck_attribution, memory_usage
     g = graph_of(blocks)
-    V = net.n_devices
+    act = [int(j) for j in net.active_ids]  # moves only target live devices
     mem = cost.memory_vector(blocks, tau)
     cur = np.asarray(place, dtype=int).copy()
     cur_pipe, cur_tie, cur_mig = _pipe_value(prev, cur, blocks, cost, net,
@@ -476,7 +482,7 @@ def refine_bottleneck(prev: Optional[np.ndarray], place: np.ndarray,
         updated best candidate (pipe, tie, mig, j)."""
         old = cur[idxs].copy()
         need = sum(mem[i] for i in idxs if cur[i] != j)
-        if use[j] + need > net.mem_capacity[j]:
+        if use[j] + need > net.mem_avail[j]:
             return best
         cur[idxs] = j
         pipe, tie, mig = _pipe_value(prev, cur, blocks, cost, net, tau, k)
@@ -507,7 +513,7 @@ def refine_bottleneck(prev: Optional[np.ndarray], place: np.ndarray,
             if not any(int(cur[i]) in hot_devs for i in idxs):
                 continue
             best = None
-            for j in range(V):
+            for j in act:
                 best = try_move(idxs, j, best)
             if best is not None:
                 commit(idxs, best)
@@ -520,7 +526,7 @@ def refine_bottleneck(prev: Optional[np.ndarray], place: np.ndarray,
             if int(cur[i]) not in hot_devs:
                 continue
             best = None
-            for j in range(V):
+            for j in act:
                 if j != int(cur[i]):
                     best = try_move([i], j, best)
             if best is not None:

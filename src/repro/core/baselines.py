@@ -140,8 +140,8 @@ class ResourceAwarePolicy(Policy):
             for i in range(len(self.blocks)):
                 src = int(cur[i])
                 best_j, best_val = src, cur_val
-                for j in range(net.n_devices):
-                    if j == src or use[j] + mem[i] > net.mem_capacity[j]:
+                for j in net.active_ids:
+                    if j == src or use[j] + mem[i] > net.mem_avail[j]:
                         continue
                     cur[i] = j
                     val = self._objective(prev, cur, net, tau)
@@ -238,13 +238,13 @@ class GreedyPolicy(Policy):
         place = np.zeros(len(self.blocks), dtype=int)
         for i in order:
             placed = False
-            for j in range(net.n_devices):
-                if mem[i] <= net.mem_capacity[j]:
-                    place[i] = j          # no aggregate re-check: greedy
+            for j in net.active_ids:
+                if mem[i] <= net.mem_avail[j]:
+                    place[i] = int(j)     # no aggregate re-check: greedy
                     placed = True
                     break
             if not placed:
-                place[i] = int(np.argmax(net.mem_capacity))
+                place[i] = int(np.argmax(net.mem_usable()))
         return place
 
 
@@ -253,7 +253,8 @@ class RoundRobinPolicy(Policy):
     name = "round-robin"
 
     def place(self, net, tau, prev):
-        return np.arange(len(self.blocks)) % net.n_devices
+        act = net.active_ids
+        return act[np.arange(len(self.blocks)) % len(act)]
 
 
 class StaticPolicy(Policy):
@@ -280,8 +281,9 @@ class DynamicLayerPolicy(Policy):
         mem_total = self.cost.memory_vector(self.blocks, tau).sum()
         comp_total = self.cost.compute_vector(self.blocks, tau).sum()
         best, best_t = None, np.inf
-        for j in range(net.n_devices):
-            if mem_total > net.mem_capacity[j]:
+        for j in net.active_ids:
+            j = int(j)
+            if mem_total > net.mem_avail[j]:
                 continue
             t = comp_total / net.compute_avail[j]
             if prev is not None and int(prev[0]) != j:
@@ -290,7 +292,7 @@ class DynamicLayerPolicy(Policy):
             if t < best_t:
                 best, best_t = j, t
         if best is None:
-            best = int(np.argmax(net.mem_capacity))
+            best = int(np.argmax(net.mem_usable()))
         return np.full(len(self.blocks), best, dtype=int)
 
 
@@ -405,13 +407,14 @@ class EdgeShardPolicy(_PipelinePolicy):
     def place(self, net, tau, prev):
         if not self.stages:
             L = self.cost.n_layers
-            order = list(np.argsort(-net.compute_avail))
+            act = net.active_ids
+            order = [int(j) for j in act[np.argsort(-net.compute_avail[act])]]
             mem_l1 = self._layer_memory(1)
             # smallest fast subset whose τ=1 memory fits
             chosen: list = []
             for j in order:
                 chosen.append(j)
-                cap = sum(net.mem_capacity[k] for k in chosen)
+                cap = sum(net.mem_avail[k] for k in chosen)
                 if cap >= L * mem_l1 and len(chosen) >= 2:
                     break
             speeds = np.array([net.compute_avail[j] for j in chosen])
@@ -445,7 +448,8 @@ class GalaxyPolicy(_PipelinePolicy):
     def place(self, net, tau, prev):
         if not self.stages:
             L = self.cost.n_layers
-            order = list(np.argsort(-net.compute_avail))
+            act = net.active_ids
+            order = [int(j) for j in act[np.argsort(-net.compute_avail[act])]]
             groups = [order[i:i + self.tp] for i in
                       range(0, len(order) - self.tp + 1, self.tp)]
             if not groups:
@@ -532,6 +536,8 @@ class LookaheadPolicy(ResourceAwarePolicy):
 
     def _forecast(self, net: DeviceNetwork) -> np.ndarray:
         obs = net.compute_avail.astype(float)
+        if self._level is not None and len(self._level) != len(obs):
+            self._level = None  # device joined: restart the forecast state
         if self._level is None:
             self._level = obs.copy()
             self._trend = np.zeros_like(obs)
@@ -543,7 +549,9 @@ class LookaheadPolicy(ResourceAwarePolicy):
         # mean forecast over the horizon, clipped to physical bounds
         steps = np.arange(1, self.horizon + 1).mean()
         pred = self._level + steps * self._trend
-        return np.clip(pred, 0.05 * net.compute_max, net.compute_max)
+        pred = np.clip(pred, 0.05 * net.compute_max, net.compute_max)
+        # the clip floor must not resurrect an inactive device's forecast
+        return np.where(net.active, pred, 0.0)
 
     def place(self, net, tau, prev):
         pred_net = net.copy()

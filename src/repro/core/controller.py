@@ -123,10 +123,26 @@ class IntervalController:
     # ------------------------------------------------------------ observe
     def observe(self, compute_avail: Optional[np.ndarray] = None,
                 mem_avail: Optional[np.ndarray] = None):
+        """Feed observed instantaneous availability.  ``mem_avail`` lands
+        in the network's availability field — hardware ``mem_capacity`` is
+        never overwritten by an observation (the old conflation made one
+        low-memory sample permanently shrink the device)."""
         if compute_avail is not None:
-            self.net.compute_avail = np.asarray(compute_avail, float)
+            obs = np.asarray(compute_avail, float)
+            # an inactive device has zero availability no matter what the
+            # (possibly stale) telemetry claims
+            self.net.compute_avail = np.where(self.net.active, obs, 0.0)
         if mem_avail is not None:
-            self.net.mem_capacity = np.asarray(mem_avail, float)
+            self.net.mem_avail = np.asarray(mem_avail, float)
+
+    def observe_monitor(self, monitor, peak_flops=None):
+        """Close the fault_tolerance loop: per-slot step-time EWMAs from a
+        ``HeartbeatMonitor`` become the C_j(τ) estimates Algorithm 1
+        reads.  Slot j maps to device j (the engine's convention).  Dead
+        slots estimate to zero; devices already failed in the network stay
+        at zero regardless of telemetry."""
+        peak = self.net.compute_max if peak_flops is None else peak_flops
+        self.observe(compute_avail=monitor.availability(peak))
 
     def update_expert_loads(self, loads):
         """Feed observed router loads (rows: per layer, one entry per
@@ -232,6 +248,45 @@ class IntervalController:
                              "arrival_rate": arrival_rate,
                              "queue_depth": queue_depth,
                              "infeasible": stats.infeasible})
+        return plan
+
+    # ------------------------------------------------------------- churn
+    def handle_failure(self, device: int,
+                       tau: Optional[int] = None) -> dict:
+        """Death event → evacuation plan: mark ``device`` failed and
+        immediately re-place.  The resulting plan's migrations move every
+        block off the dead device (the assigner cannot place there), and
+        the §III.G payback filter is structurally bypassed for them —
+        ``revert_unpaying_migrations`` never reverts a block onto an
+        inactive device — so the evacuation is mandatory, not priced.
+        Surviving blocks keep their hysteresis stickiness, minimizing
+        collateral migrations."""
+        self.net.fail(device)
+        plan = self.step_interval(tau=tau)
+        if np.any(np.asarray(plan["place"]) == device):
+            # the infeasible fallback kept blocks on the dead device —
+            # survivors cannot hold the model; fail loudly, not silently
+            raise RuntimeError(
+                f"evacuation infeasible: surviving devices cannot hold "
+                f"device {device}'s blocks (n_active={self.net.n_active})")
+        plan["evacuation"] = True
+        plan["failed_device"] = int(device)
+        self.history[-1]["evacuation"] = True
+        self.history[-1]["failed_device"] = int(device)
+        return plan
+
+    def handle_rejoin(self, device: int,
+                      tau: Optional[int] = None) -> dict:
+        """A failed device comes back (fresh, no resident state) →
+        expansion plan.  Unlike evacuation, expansion is optional: the
+        controller only migrates onto the rejoined device when the move
+        pays under the normal §III.G filter."""
+        self.net.rejoin(device)
+        plan = self.step_interval(tau=tau)
+        plan["expansion"] = True
+        plan["rejoined_device"] = int(device)
+        self.history[-1]["expansion"] = True
+        self.history[-1]["rejoined_device"] = int(device)
         return plan
 
     # ---------------------------------------------------------------- act

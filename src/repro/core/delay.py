@@ -76,6 +76,13 @@ def _rate(net: DeviceNetwork, j: int, k: int) -> float:
     return float(net.bandwidth[j, k])
 
 
+def _cdiv(x: float, rate: float) -> float:
+    """Compute-time division pricing a dead device (C_j = 0) as +inf
+    without tripping numpy's divide-by-zero warning: a placement that
+    still references an inactive device has unbounded delay."""
+    return float(x) / float(rate) if rate > 0.0 else np.inf
+
+
 def _expert_stage(g, l, place, cost, tau):
     """Per-device (load fraction, summed compute) of layer l's expert
     blocks: the router fan-out/combine structure the delay model prices.
@@ -125,19 +132,19 @@ def inference_delay(place: np.ndarray, blocks: Sequence[Block],
         for h in heads:
             j = int(place[h.index])
             t_in = sum(fr * w_in / _rate(net, s, j) for s, fr in sources)
-            t_proc = head_compute_on[j] / net.compute_avail[j]
+            t_proc = _cdiv(head_compute_on[j], net.compute_avail[j])
             t_out = vol_to_proj[j] / _rate(net, j, d_proj)
             worst = max(worst, t_in + t_proc + t_out)
 
         total += worst
         if not strict_eq6:
-            total += cost.compute(g.proj[l], tau) / net.compute_avail[d_proj]
+            total += _cdiv(cost.compute(g.proj[l], tau), net.compute_avail[d_proj])
         if g.ffn[l] is not None:
             d_ffn = int(place[g.ffn[l].index])
             total += cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn)
             if not strict_eq6:
-                total += cost.compute(g.ffn[l], tau) \
-                    / net.compute_avail[d_ffn]
+                total += _cdiv(cost.compute(g.ffn[l], tau),
+                               net.compute_avail[d_ffn])
             sources = [(d_ffn, 1.0)]
         else:
             # expert stage: router fan-out (load-fraction-scaled
@@ -152,7 +159,7 @@ def inference_delay(place: np.ndarray, blocks: Sequence[Block],
             for d in sorted(agg):
                 fr, cp = agg[d]
                 t_x = fr * w_p2f / _rate(net, d_proj, d)
-                t_c = 0.0 if strict_eq6 else cp / net.compute_avail[d]
+                t_c = 0.0 if strict_eq6 else _cdiv(cp, net.compute_avail[d])
                 if t_x + t_c > stage:
                     stage, stage_t, stage_c = t_x + t_c, t_x, t_c
             total += stage_t
@@ -195,7 +202,7 @@ def resource_busy_times(place: np.ndarray, blocks: Sequence[Block],
         for h in heads:
             j = int(place[h.index])
             head_devs.add(j)
-            dev_busy[j] += cost.compute(h, tau) / net.compute_avail[j]
+            dev_busy[j] += _cdiv(cost.compute(h, tau), net.compute_avail[j])
             add_link(j, d_proj, w_head / _rate(net, j, d_proj))
         # inter-layer broadcast: one transfer per destination device
         # (co-located heads share it — the controller-input convention);
@@ -205,13 +212,13 @@ def resource_busy_times(place: np.ndarray, blocks: Sequence[Block],
             for j in sorted(head_devs):
                 add_link(s, j, fr * w_in / _rate(net, s, j))
         if not strict_eq6:
-            dev_busy[d_proj] += cost.compute(g.proj[l], tau) \
-                / net.compute_avail[d_proj]
+            dev_busy[d_proj] += _cdiv(cost.compute(g.proj[l], tau),
+                                      net.compute_avail[d_proj])
         if g.ffn[l] is not None:
             d_ffn = int(place[g.ffn[l].index])
             if not strict_eq6:
-                dev_busy[d_ffn] += cost.compute(g.ffn[l], tau) \
-                    / net.compute_avail[d_ffn]
+                dev_busy[d_ffn] += _cdiv(cost.compute(g.ffn[l], tau),
+                                         net.compute_avail[d_ffn])
             add_link(d_proj, d_ffn,
                      cost.proj_to_ffn_bytes(tau) / _rate(net, d_proj, d_ffn))
             sources = [(d_ffn, 1.0)]
@@ -221,7 +228,7 @@ def resource_busy_times(place: np.ndarray, blocks: Sequence[Block],
             for d in sorted(agg):
                 fr, cp = agg[d]
                 if not strict_eq6:
-                    dev_busy[d] += cp / net.compute_avail[d]
+                    dev_busy[d] += _cdiv(cp, net.compute_avail[d])
                 add_link(d_proj, d, fr * w_p2f / _rate(net, d_proj, d))
             sources = [(d, agg[d][0]) for d in sorted(agg)]
         w_in = cost.interlayer_bytes(tau)
@@ -334,13 +341,18 @@ def revert_unpaying_migrations(prev: Optional[np.ndarray],
     ``ResourceAwarePolicy``: each migrated block is reverted to its
     previous device when keeping the move does not lower
     D_pipe(k) + D_mig by at least ``min_gain`` (k=1: D_T + D_mig).
-    Reverts are only taken when memory-feasible."""
+    Reverts are only taken when memory-feasible, and NEVER back onto an
+    inactive device — an evacuation off a dead device is mandatory, so
+    the §III.G payback filter cannot undo it (the bypass ISSUE/§III.G
+    requires is structural, not a flag)."""
     if prev is None:
         return place
     current = place.copy()
     cur_val = pipelined_total_delay(prev, current, blocks, cost, net, tau,
                                     k=k)
     for i in np.flatnonzero(current != prev):
+        if not net.is_active(int(prev[i])):
+            continue  # forced evacuation: reverting would re-kill the block
         trial = current.copy()
         trial[i] = prev[i]
         if not memory_feasible(trial, blocks, cost, net, tau):
@@ -362,5 +374,8 @@ def memory_usage(place: np.ndarray, blocks: Sequence[Block],
 
 def memory_feasible(place: np.ndarray, blocks: Sequence[Block],
                     cost: CostModel, net: DeviceNetwork, tau: int) -> bool:
+    """Feasible against the *usable* memory view: observed availability,
+    zero on inactive devices — so any placement still referencing a dead
+    device is infeasible by construction."""
     return bool(np.all(memory_usage(place, blocks, cost, net, tau)
-                       <= net.mem_capacity + 1e-9))
+                       <= net.mem_usable() + 1e-9))

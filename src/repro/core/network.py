@@ -43,10 +43,114 @@ class DeviceNetwork:
     bg_duration: float = 150.0
     _bg_tasks: Optional[list] = None  # per-device list of load fractions
     _pinned_load: Optional["np.ndarray"] = None  # injected stragglers
+    # Elastic churn state.  `active` is the liveness mask: a failed device
+    # stays in the arrays (indices — and therefore permutation geometry —
+    # never shift) but exposes zero availability and may not receive
+    # blocks.  `_mem_avail` backs the *instantaneous* memory availability
+    # M_j(τ) the controller observes, distinct from the hardware
+    # `mem_capacity` (which observation must never overwrite — the
+    # Controller.observe() conflation bug); until the first observation it
+    # tracks capacity, so capacity edits keep constraining placement.
+    active: Optional[np.ndarray] = None       # (V,) bool, liveness mask
+    _mem_avail: Optional[np.ndarray] = None   # (V,) bytes, observed M_j(tau)
+
+    def __post_init__(self):
+        if self.active is None:
+            self.active = np.ones(self.n_devices, dtype=bool)
+
+    @property
+    def mem_avail(self) -> np.ndarray:
+        """(V,) observed memory availability; capacity until observed."""
+        return self.mem_capacity if self._mem_avail is None \
+            else self._mem_avail
+
+    @mem_avail.setter
+    def mem_avail(self, value):
+        self._mem_avail = None if value is None \
+            else np.asarray(value, float).copy()
 
     @property
     def n_devices(self) -> int:
         return len(self.mem_capacity)
+
+    # ------------------------------------------------------------ liveness
+    @property
+    def n_active(self) -> int:
+        return int(np.count_nonzero(self.active))
+
+    @property
+    def active_ids(self) -> np.ndarray:
+        """Indices of live devices — the only legal placement targets."""
+        return np.flatnonzero(self.active)
+
+    def is_active(self, j: int) -> bool:
+        return bool(self.active[j])
+
+    def mem_usable(self) -> np.ndarray:
+        """(V,) usable memory: observed availability, zero when inactive."""
+        return np.where(self.active, self.mem_avail, 0.0)
+
+    def fail(self, j: int):
+        """Device j dies: zero availability, excluded from placement.
+        Indices are preserved so existing placements/permutations remain
+        addressable — the controller must evacuate, not reindex."""
+        self.active[j] = False
+        self.compute_avail[j] = 0.0
+        if self._mem_avail is not None:
+            self._mem_avail[j] = 0.0  # mem_usable() masks either way
+        if self._pinned_load is not None:
+            self._pinned_load[j] = 0.0
+
+    def rejoin(self, j: int):
+        """A previously failed device comes back, fresh (full capacity,
+        no resident state).  The engine-facing join: physical slot
+        geometry is fixed at construction, so an engine expansion is a
+        slot re-activating — ``join`` (new index) is for the planning
+        layers, whose placements are not tied to a cache shape."""
+        self.active[j] = True
+        if self._mem_avail is not None:
+            self._mem_avail[j] = self.mem_capacity[j]
+        self.compute_avail[j] = self.compute_max[j]
+        if self._pinned_load is not None:
+            self._pinned_load[j] = 0.0
+
+    def slow(self, j: int, factor: float):
+        """Device j becomes `factor`x slower (persistent pinned load)."""
+        if factor < 1.0:
+            raise ValueError(f"slowdown factor must be >= 1, got {factor}")
+        if not self.active[j]:
+            return
+        self.inject_straggler(j, factor)
+
+    def join(self, mem: float, compute: float,
+             bw_row: "np.ndarray") -> int:
+        """A new device joins with `mem` bytes, `compute` FLOP/s, and
+        symmetric link bandwidths `bw_row` (len V) to the existing
+        devices.  Returns the new device's index."""
+        bw_row = np.asarray(bw_row, float)
+        if bw_row.shape != (self.n_devices,):
+            raise ValueError(
+                f"bw_row must have shape ({self.n_devices},), "
+                f"got {bw_row.shape}")
+        if mem <= 0 or compute <= 0 or np.any(bw_row <= 0):
+            raise ValueError("joining device needs positive mem/compute/bw")
+        v = self.n_devices
+        self.mem_capacity = np.append(self.mem_capacity, float(mem))
+        if self._mem_avail is not None:
+            self._mem_avail = np.append(self._mem_avail, float(mem))
+        self.compute_max = np.append(self.compute_max, float(compute))
+        self.compute_avail = np.append(self.compute_avail, float(compute))
+        self.active = np.append(self.active, True)
+        bw = np.full((v + 1, v + 1), np.inf)
+        bw[:v, :v] = self.bandwidth
+        bw[v, :v] = bw_row
+        bw[:v, v] = bw_row
+        self.bandwidth = bw
+        if self._bg_tasks is not None:
+            self._bg_tasks.append([])
+        if self._pinned_load is not None:
+            self._pinned_load = np.append(self._pinned_load, 0.0)
+        return v
 
     # ------------------------------------------------------------- sampling
     @classmethod
@@ -101,7 +205,7 @@ class DeviceNetwork:
         assert self.rng is not None
         if self._bg_tasks is None:
             self._bg_tasks = [[] for _ in range(self.n_devices)]
-        for j in range(self.n_devices):
+        for j in self.active_ids:
             # departures
             self._bg_tasks[j] = [f for f in self._bg_tasks[j]
                                  if self.rng.random() > 1.0 / self.bg_duration]
@@ -119,12 +223,16 @@ class DeviceNetwork:
     def inject_straggler(self, device: int, slowdown: float):
         """Fault-tolerance hook: device becomes `slowdown`x slower,
         persistently (survives step_background_load as pinned load)."""
+        if not self.active[device]:
+            return
         if self._pinned_load is None:
             self._pinned_load = np.zeros(self.n_devices)
         self._pinned_load[device] = 1.0 - 1.0 / slowdown
         self.compute_avail[device] = self.compute_max[device] / slowdown
 
     def restore(self, device: int):
+        if not self.active[device]:
+            return
         if self._pinned_load is not None:
             self._pinned_load[device] = 0.0
         self.compute_avail[device] = self.compute_max[device]
@@ -138,4 +246,7 @@ class DeviceNetwork:
                              None if self._bg_tasks is None else
                              [list(t) for t in self._bg_tasks],
                              None if self._pinned_load is None else
-                             self._pinned_load.copy())
+                             self._pinned_load.copy(),
+                             self.active.copy(),
+                             None if self._mem_avail is None else
+                             self._mem_avail.copy())

@@ -115,11 +115,16 @@ def score(block: Block, j: int, blocks: Sequence[Block],
     """S(i,j,τ).  ``mem_used``/``compute_used`` optionally subtract already-
     assigned load on j (the per-block score in the paper is load-free; the
     algorithm's constraint check handles concurrency — §IV.A)."""
-    mem_cap = net.mem_capacity[j] - (0.0 if mem_used is None else mem_used[j])
+    if not net.is_active(j):
+        # inactive device: no block may land here — enforced, not priced
+        return np.inf
+    mem_cap = net.mem_avail[j] - (0.0 if mem_used is None else mem_used[j])
     if mem_cap <= 0:
         return np.inf
-    mem_term = cost.memory(block, tau) / mem_cap
     comp_avail = net.compute_avail[j]
+    if comp_avail <= 0:
+        return np.inf
+    mem_term = cost.memory(block, tau) / mem_cap
     comp_term = (cost.compute(block, tau) +
                  (0.0 if compute_used is None else compute_used[j])) \
         / comp_avail / deadline

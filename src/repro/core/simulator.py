@@ -80,7 +80,7 @@ def overload_stall(place: np.ndarray, blocks: Sequence[Block],
                    cost: CostModel, net: DeviceNetwork, tau: int,
                    swap_bw: float = 1e9) -> float:
     use = memory_usage(place, blocks, cost, net, tau)
-    overflow = np.maximum(use - net.mem_capacity, 0.0)
+    overflow = np.maximum(use - net.mem_usable(), 0.0)
     return float(overflow.max() / swap_bw) if overflow.size else 0.0
 
 
@@ -88,20 +88,30 @@ def simulate(policy: Policy, blocks: Sequence[Block], cost: CostModel,
              net: DeviceNetwork, n_tokens: int, *,
              fluctuate: bool = True, swap_bw: float = 1e9,
              strict_eq6: bool = False, seed: Optional[int] = None,
-             pipeline_k: int = 1) -> SimResult:
+             pipeline_k: int = 1,
+             events: Optional[Sequence] = None) -> SimResult:
     """``pipeline_k`` > 1 prices each step at the amortized per-token
     pipelined delay D_pipe(K) — K tokens of different requests in flight
     over layer-disjoint stages — instead of the sequential D_T.
-    ``pipeline_k=1`` is unchanged bit-for-bit."""
+    ``pipeline_k=1`` is unchanged bit-for-bit.
+
+    ``events`` injects device churn mid-run: an iterable of ``(tau, fn)``
+    pairs; each ``fn(net)`` runs before the policy places at that
+    interval (e.g. ``lambda net: net.fail(3)``)."""
     net = net.copy()
     if seed is not None:
         net.rng = np.random.default_rng(seed)
+    by_tau: Dict[int, list] = {}
+    for ev_tau, fn in (events or ()):
+        by_tau.setdefault(int(ev_tau), []).append(fn)
     prev: Optional[np.ndarray] = None
     cumulative = 0.0
     records: List[StepRecord] = []
     for tau in range(1, n_tokens + 1):
         if fluctuate and tau > 1:
             net.step_background_load()
+        for fn in by_tau.get(tau, ()):
+            fn(net)
         place = policy.place(net, tau, prev)
         infeasible = place is None
         d_bneck = 0.0
@@ -118,7 +128,7 @@ def simulate(policy: Policy, blocks: Sequence[Block], cost: CostModel,
             d_mig = 0.0
             d_inf = policy.step_delay(net, tau)
             use = policy.device_memory(net, tau)
-            overflow = np.maximum(use - net.mem_capacity, 0.0)
+            overflow = np.maximum(use - net.mem_usable(), 0.0)
             d_ovl = float(overflow.max() / swap_bw)
             n_mig = 0
         else:

@@ -57,8 +57,13 @@ def _check_objective(objective: str, who: str):
                          f"got {objective!r}")
 
 
-def _all_placements(n_blocks: int, n_devices: int):
-    for combo in itertools.product(range(n_devices), repeat=n_blocks):
+def _all_placements(n_blocks: int, devices):
+    """Enumerate placements over an explicit device-id list — the active
+    view, so a shrunk/grown device set reuses the same enumeration.  An
+    int is accepted as shorthand for ``range(devices)``."""
+    if isinstance(devices, (int, np.integer)):
+        devices = range(int(devices))
+    for combo in itertools.product(devices, repeat=n_blocks):
         yield np.array(combo, dtype=int)
 
 
@@ -85,10 +90,10 @@ def exact_myopic(blocks: Sequence[Block], cost: CostModel,
     ``objective="bottleneck"`` minimizes the busiest resource instead
     (module docstring) and returns its busy time (+ D_mig) as the value."""
     _check_objective(objective, "exact_myopic")
-    _check_enumerable(len(blocks), net.n_devices, MAX_MYOPIC_PLACEMENTS,
+    _check_enumerable(len(blocks), net.n_active, MAX_MYOPIC_PLACEMENTS,
                       "exact_myopic")
     best, best_val = None, None
-    for place in _all_placements(len(blocks), net.n_devices):
+    for place in _all_placements(len(blocks), list(net.active_ids)):
         if not memory_feasible(place, blocks, cost, net, tau):
             continue
         if objective == "bottleneck":
@@ -115,7 +120,7 @@ def exact_horizon(blocks: Sequence[Block], cost: CostModel,
     pair instead (sums of pairs compare lexicographically, so the Bellman
     recursion is unchanged)."""
     _check_objective(objective, "exact_horizon")
-    _check_enumerable(len(blocks), nets[0].n_devices, MAX_HORIZON_STATES,
+    _check_enumerable(len(blocks), nets[0].n_active, MAX_HORIZON_STATES,
                       "exact_horizon")
 
     def stage_val(prev, place, net, tau) -> tuple:
@@ -128,7 +133,8 @@ def exact_horizon(blocks: Sequence[Block], cost: CostModel,
     def add(a: tuple, b: tuple) -> tuple:
         return tuple(x + y for x, y in zip(a, b))
 
-    states = [p for p in _all_placements(len(blocks), nets[0].n_devices)]
+    states = [p for p in _all_placements(len(blocks),
+                                         list(nets[0].active_ids))]
     n = len(states)
     # stage 1: no migration cost
     val: List[Optional[tuple]] = [None] * n

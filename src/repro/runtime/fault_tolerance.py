@@ -79,12 +79,19 @@ class HeartbeatMonitor:
         return [j for j, t in self.slots.items()
                 if now - t.last_heartbeat > self.heartbeat_timeout]
 
-    def sweep_hung(self) -> List[int]:
+    def sweep_hung(self, on_hung: Optional[Callable[[int], None]] = None
+                   ) -> List[int]:
         """One-shot hang sweep (the async runtime's worker watchdog):
         slots silent past ``heartbeat_timeout`` transition to dead exactly
         once — the transition (not every poll) lands in the event log, and
         ``availability`` zeroes the slot until a heartbeat revives it.
-        Returns the slots that newly transitioned this sweep."""
+        Returns the slots that newly transitioned this sweep.
+
+        ``on_hung(slot)`` is the recovery escalation hook, invoked once
+        per newly-hung slot AFTER the transition is logged (default None:
+        the original log-only behavior).  Detection and recovery stay
+        separable — the callback's own events land in the log too, so an
+        escalation that raises is still attributable."""
         now = self._clock()
         newly: List[int] = []
         for j, t in self.slots.items():
@@ -94,20 +101,28 @@ class HeartbeatMonitor:
                 newly.append(j)
                 self.record_event("worker_hung", slot=j,
                                   silent_s=float(silent))
+        if on_hung is not None:
+            for j in newly:
+                self.record_event("recovery_escalated", slot=j)
+                on_hung(j)
         return newly
 
-    def availability(self, peak_flops: float) -> np.ndarray:
+    def availability(self, peak_flops) -> np.ndarray:
         """C_j(τ) estimates for Algorithm 1: peak scaled by the inverse of
-        the slot's slowdown relative to the median step time."""
+        the slot's slowdown relative to the median step time.  Dead slots
+        estimate to 0.0.  ``peak_flops`` may be a scalar or a per-slot
+        array (heterogeneous devices).  The estimate is monotone
+        non-increasing in a slot's observed mean step time."""
+        peak = np.broadcast_to(np.asarray(peak_flops, float),
+                               (len(self.slots),)).astype(float).copy()
         med = self.median_step()
-        out = np.full(len(self.slots), peak_flops)
-        if med <= 0:
-            return out
+        out = peak.copy()
         for j, t in self.slots.items():
             if not t.alive:
                 out[j] = 0.0
-            elif t.step_times:
-                out[j] = peak_flops * min(1.0, med / float(np.mean(t.step_times)))
+            elif med > 0 and t.step_times:
+                out[j] = peak[j] * min(1.0,
+                                       med / float(np.mean(t.step_times)))
         return out
 
     def mark_failed(self, slot: int):

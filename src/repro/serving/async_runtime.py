@@ -111,7 +111,8 @@ class AsyncServingEngine:
     def __init__(self, engine: ServingEngine, *, queue_limit: int = 64,
                  heartbeat_timeout: float = 30.0,
                  idle_poll_s: float = 0.02,
-                 heartbeat_clock=None):
+                 heartbeat_clock=None,
+                 escalate_hangs: bool = True):
         if not isinstance(engine, ServingEngine):
             raise TypeError("AsyncServingEngine drives the slot-level "
                             "ServingEngine (continuous batching); got "
@@ -131,6 +132,7 @@ class AsyncServingEngine:
         self.monitor = HeartbeatMonitor(
             2, heartbeat_timeout=heartbeat_timeout, **kw)
         self.idle_poll_s = float(idle_poll_s)
+        self.escalate_hangs = bool(escalate_hangs)
         self._wake: Optional[asyncio.Event] = None
         self._tasks: List[asyncio.Task] = []
         self._watch: Optional[asyncio.Task] = None
@@ -250,8 +252,26 @@ class AsyncServingEngine:
         """Sweep the worker heartbeat monitor: newly-hung workers (silent
         past the timeout) are logged once into ``monitor.events`` and
         returned.  The watchdog calls this periodically; tests call it
-        directly on a virtual clock."""
-        return self.monitor.sweep_hung()
+        directly on a virtual clock.
+
+        With ``escalate_hangs`` (the default) a newly-hung worker
+        additionally ESCALATES to controller recovery instead of only
+        being logged: the engine controller re-reads C_j(τ) from the
+        device monitor (hung/failed devices estimate to zero) and the
+        next scheduler step is forced to re-run Algorithm 1 — so a stall
+        triggers re-placement in one watchdog period rather than waiting
+        out the λ cadence."""
+        on_hung = self._escalate if self.escalate_hangs else None
+        return self.monitor.sweep_hung(on_hung=on_hung)
+
+    def _escalate(self, worker: int):
+        """worker_hung → controller recovery (ROADMAP's log-only watchdog
+        gap): refresh the controller's availability view from the engine's
+        device monitor and force a replan at the next step."""
+        eng = self.engine
+        eng.controller.observe_monitor(eng.monitor,
+                                       peak_flops=eng.net.compute_avail)
+        eng.request_replan()
 
     # ---------------------------------------------------------- lifecycle
     def start(self):

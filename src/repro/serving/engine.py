@@ -294,7 +294,10 @@ class _EngineBase:
 
     # ------------------------------------------------------------- telemetry
     def _record_step(self, dt: float):
-        for j in range(self.net.n_devices):
+        # only live devices heartbeat: a failed device must stay silent in
+        # the monitor (its availability estimate is pinned at zero) until
+        # rejoin_device revives it
+        for j in self.net.active_ids:
             self.monitor.record_step(j, dt)
 
     def _load_signal(self) -> tuple:
@@ -318,14 +321,24 @@ class _EngineBase:
         interval record, so the controller sees LOAD, not just occupancy
         (the honest signal traffic-adaptive search will consume)."""
         self.net.step_background_load()
-        self.controller.observe(compute_avail=self.net.compute_avail)
-        tau = None
-        if tau_tokens is not None:
-            tau = max(1, round((tau_tokens - self.cost.L0)
-                               / max(self.cost.lam, 1)))
+        # close the fault-tolerance loop: C_j(τ) comes from the heartbeat
+        # monitor's step-time EWMAs scaling the background-load estimate.
+        # Uniform step times leave the estimate untouched (ratio 1), so a
+        # churn-free run observes exactly what direct observation would;
+        # hung/failed slots estimate to zero.
+        self.controller.observe_monitor(self.monitor,
+                                        peak_flops=self.net.compute_avail)
         rate, depth = self._load_signal()
-        return self.controller.step_interval(tau=tau, arrival_rate=rate,
+        return self.controller.step_interval(tau=self._tau_of(tau_tokens),
+                                             arrival_rate=rate,
                                              queue_depth=depth)
+
+    def _tau_of(self, tau_tokens: Optional[int]) -> Optional[int]:
+        """Occupancy (tokens) -> interval index τ of the cost model."""
+        if tau_tokens is None:
+            return None
+        return max(1, round((tau_tokens - self.cost.L0)
+                            / max(self.cost.lam, 1)))
 
     def _migrate_state(self, state, plan, permute_params: bool = True):
         """Execute ``plan`` physically on one decode state: permute weights
@@ -646,6 +659,13 @@ class ServingEngine(_EngineBase):
             collections.deque(maxlen=4096)    # {step, slot, rid, bucket}
         self.prefill_buckets_used: set = set()
         self.slot_busy_steps = 0              # sum of active slots per step
+        # elastic churn: recovery events (fail/rejoin) with their replay
+        # accounting, plus the client-visible tokens dropped by recovery
+        # (teacher-forced replay re-derives every stream, so this stays 0
+        # unless a future recovery path chooses to shed work)
+        self.recovery_log: List[dict] = []
+        self.tokens_lost = 0
+        self._replan_pending = False
 
     def _fresh_state(self, batch: int, max_seq: Optional[int] = None,
                      img: Optional[np.ndarray] = None,
@@ -940,32 +960,204 @@ class ServingEngine(_EngineBase):
         # scheduler steps — the controller fires per λ *generated* tokens,
         # matching wall-clock token output (the τ anchor itself is already
         # token-denominated via _occupancy)
-        if self.decode_steps % (self.lam * self.pipeline_k) == 0:
+        if self._replan_pending \
+                or self.decode_steps % (self.lam * self.pipeline_k) == 0:
+            self._replan_pending = False
             # live router loads first: this interval's expert placement is
             # priced by the decode stream's gate frequencies, not the prior
             self._feed_expert_loads(self.states)
             plan = self._interval_plan(tau_tokens=self._occupancy())
-            applied, reason = False, None
-            if plan["migrations"]:
-                for i in range(self.pipeline_k):
-                    self.states[i], applied, reason = self._migrate_state(
-                        self.states[i], plan, permute_params=(i == 0))
-            if applied:
-                # weights/caches now sit in the plan's layout; the kernel
-                # gather maps must follow the same source of truth
-                self._phys_perms = plan["perms"]
-            # expert rows are weight-only state shared by all groups:
-            # permute them exactly once per plan
-            e_applied, e_reason = self._migrate_experts(plan)
-            self._refresh_head_rows(plan)
-            self._log_interval(plan, applied, reason, e_applied, e_reason)
+            self._apply_plan(plan)
         return True
+
+    def _apply_plan(self, plan: dict):
+        """Execute a controller plan physically on every in-flight group:
+        cache/weight permutations (weights once), expert weight rows once,
+        kernel gather maps, interval log.  Shared by the periodic interval
+        and the churn paths (failure evacuation / rejoin expansion)."""
+        applied, reason = False, None
+        if plan["migrations"]:
+            for i in range(self.pipeline_k):
+                self.states[i], applied, reason = self._migrate_state(
+                    self.states[i], plan, permute_params=(i == 0))
+        if applied:
+            # weights/caches now sit in the plan's layout; the kernel
+            # gather maps must follow the same source of truth
+            self._phys_perms = plan["perms"]
+        # expert rows are weight-only state shared by all groups:
+        # permute them exactly once per plan
+        e_applied, e_reason = self._migrate_experts(plan)
+        self._refresh_head_rows(plan)
+        self._log_interval(plan, applied, reason, e_applied, e_reason)
 
     def run(self, max_steps: int = 10_000):
         while self.decode_steps < max_steps:
             if not self.step():
                 break
         return self.finished
+
+    # ------------------------------------------------------------- churn
+    def request_replan(self):
+        """Force the controller interval to fire on the next scheduler
+        step regardless of the λ cadence — the async watchdog's recovery
+        escalation hook (a hang must not wait out a long interval)."""
+        self._replan_pending = True
+
+    def slow_device(self, device: int, factor: float):
+        """Persistent ``factor``x slowdown on ``device``: pinned load the
+        monitor-fed observation surfaces at the next interval, where
+        Algorithm 1 migrates away iff the move pays (§III.G)."""
+        self.net.slow(device, factor)
+
+    def fail_device(self, device: int) -> dict:
+        """Device death mid-decode: evacuate, then recover bit-identically.
+
+        The controller's evacuation plan moves the dead device's blocks to
+        survivors (raising when they cannot hold them), and ``_apply_plan``
+        permutes weights/caches into the new layout.  Head permutations
+        always route rows *through* the dead device's cache rows, so part
+        of every group's KV cache is unrecoverable — instead of shedding
+        the affected requests, every in-flight stream is rebuilt by
+        teacher-forced replay of its already-emitted tokens through the
+        engine's own prefill/decode jits (identical ops, identical batch
+        geometry => bitwise-identical cache, hence bit-identical surviving
+        streams).  No client-visible token is dropped: ``tokens_lost``
+        stays 0 and replay never re-emits or re-samples."""
+        if not self.net.is_active(device):
+            raise ValueError(f"device {device} is not active")
+        self.monitor.mark_failed(device)
+        self._feed_expert_loads(self.states)
+        plan = self.controller.handle_failure(
+            device, tau=self._tau_of(self._occupancy()))
+        self._apply_plan(plan)
+        stats = self._replay_groups()
+        self.recovery_log.append({
+            "step": self.decode_steps, "event": "fail",
+            "device": int(device), "tokens_lost": 0,
+            "d_mig_est": plan["d_mig_est"],
+            "d_pipe_est": plan["d_pipe_est"], **stats})
+        return plan
+
+    def rejoin_device(self, device: int) -> dict:
+        """A previously failed device returns (empty): the controller's
+        expansion plan re-spreads blocks onto it when that pays, and
+        ``_apply_plan`` executes the moves — migration copies KV rows
+        from surviving sources, so rejoin needs no replay."""
+        if self.net.is_active(device):
+            raise ValueError(f"device {device} is already active")
+        plan = self.controller.handle_rejoin(
+            device, tau=self._tau_of(self._occupancy()))
+        self.monitor.record_heartbeat(device)
+        self._apply_plan(plan)
+        self.recovery_log.append({
+            "step": self.decode_steps, "event": "rejoin",
+            "device": int(device),
+            "n_migrations": len(plan["migrations"])})
+        return plan
+
+    # ----------------------------------------------------------- replay
+    def _replay_groups(self) -> dict:
+        stats = {"replay_steps": 0, "replay_prefills": 0,
+                 "replayed_slots": 0}
+        for g in range(self.pipeline_k):
+            st = self._replay_group(g)
+            for k in stats:
+                stats[k] += st[k]
+        return stats
+
+    def _replay_group(self, g: int) -> dict:
+        """Rebuild group ``g``'s KV cache from its slots' request records.
+
+        Slots are re-prefilled and then teacher-forced through the SAME
+        donated decode jit, in the same batch geometry, feeding each
+        already-emitted token at the position that originally produced its
+        successor.  Unequal depths are staggered: with n_s tokens emitted
+        on slot s and N = max(n_s), slot s is inserted at tick N - n_s so
+        every slot finishes together — before insertion its row decodes
+        garbage exactly like a freed slot's row, which the masking tests
+        prove cannot touch other rows.  Replay samples nothing and emits
+        nothing: ``_next``/``sample_count``/``decode_steps`` are whatever
+        live decode left them."""
+        active = self._group_active(g)
+        lo = g * self.rows_per_group
+        if self.paged:
+            # the old allocator's page map described the pre-failure cache;
+            # a fresh pool re-admitted in slot order reproduces admission's
+            # reservations against the rebuilt (empty) page buffer
+            from repro.serving.paging import PagedKVAllocator
+            self.allocators[g] = PagedKVAllocator(
+                self.kv_pages, self.page_size, self.rows_per_group,
+                self.pages_per_slot)
+        self.states[g] = self._attach_head_rows(
+            self._fresh_state(self.rows_per_group))
+        out = {"replay_steps": 0, "replay_prefills": 0,
+               "replayed_slots": len(active)}
+        if not active:
+            return out
+        ns = {s: len(self.slots[s].out_tokens) for s in active}
+        max_n = max(ns.values())
+        for i in range(max_n):
+            for s in active:
+                if max_n - ns[s] == i:
+                    self._replay_insert(g, s)
+                    out["replay_prefills"] += 1
+            if i == max_n - 1:
+                break   # the last emitted token was never decoded upon
+            nxt = np.zeros(self.rows_per_group, np.int32)
+            for s in active:
+                k = i - (max_n - ns[s])
+                if k >= 0:
+                    r = self.slots[s]
+                    nxt[s - lo] = r.out_tokens[k]
+                    if self.paged:
+                        # this step writes position L0 + k for slot s
+                        self._replay_extend(g, s - lo, len(r.prompt) + k)
+            _, self.states[g] = self._decode_jit(
+                self.params, self.states[g], jnp.asarray(nxt))
+            out["replay_steps"] += 1
+        return out
+
+    def _replay_insert(self, g: int, s: int):
+        """Re-run slot ``s``'s admission-time prefill (same jits, same
+        chunking/bucketing) into the rebuilt group state."""
+        r = self.slots[s]
+        row = s - g * self.rows_per_group
+        L0 = len(r.prompt)
+        if self.paged:
+            alloc = self.allocators[g]
+            horizon = min(L0 + r.max_new_tokens + 1, self.max_seq)
+            alloc.admit(row, n_tokens=L0, horizon=horizon)
+            self.states[g] = self._mount_jit(
+                self.states[g], jnp.int32(row),
+                jnp.asarray(alloc.page_map_row(row)), jnp.int32(0))
+            C = self.prefill_chunk
+            for c0 in range(0, max(L0, 1), C):
+                n = min(C, L0 - c0)
+                toks = np.zeros((1, C), np.int32)
+                toks[0, :n] = r.prompt[c0:c0 + n]
+                _, self.states[g] = self._paged_prefill_jit(
+                    self.params, self.states[g], jnp.asarray(toks),
+                    jnp.int32(row), jnp.int32(c0), jnp.int32(n))
+            return
+        Lb = self._bucket(L0)
+        toks = np.zeros((1, Lb), np.int32)
+        toks[0, :L0] = r.prompt
+        sub = self._fresh_state(
+            1, Lb,
+            img=None if r.img is None else r.img[None],
+            img_mask=None if r.img_mask is None else r.img_mask[None])
+        _, sub = self._prefill_bucketed_jit(
+            self.params, sub, jnp.asarray(toks),
+            jnp.asarray([L0], jnp.int32))
+        self.states[g] = self._insert_jit(self.states[g], sub, row)
+
+    def _replay_extend(self, g: int, row: int, write_pos: int):
+        alloc = self.allocators[g]
+        if write_pos >= alloc.pages_for(row) * self.page_size:
+            alloc.extend(row, write_pos + 1)
+            self.states[g] = self._mount_jit(
+                self.states[g], jnp.int32(row),
+                jnp.asarray(alloc.page_map_row(row)), jnp.int32(write_pos))
 
 
 class WaveServingEngine(_EngineBase):

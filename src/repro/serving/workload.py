@@ -203,7 +203,9 @@ def _pctls(xs: Sequence[float], prefix: str) -> Dict[str, float]:
 
 def drive_virtual(eng, reqs: Sequence[TimedRequest], *,
                   step_dt: float = 1.0,
-                  max_steps: int = 200_000) -> dict:
+                  max_steps: int = 200_000,
+                  price_by_model: bool = False,
+                  events: Optional[Sequence[tuple]] = None) -> dict:
     """Run ``reqs`` through a (synchronous) serving engine on a virtual
     clock: each scheduler step costs ``step_dt`` (pipeline bubbles
     included — an empty due group still burns time), idle gaps jump to
@@ -212,10 +214,28 @@ def drive_virtual(eng, reqs: Sequence[TimedRequest], *,
     request's *arrival* and its first emitted token — the tail the
     offered-load sweep exists to expose.
 
-    Deterministic: same engine seed + same workload => identical streams
-    AND identical latency percentiles, machine-independent."""
+    ``price_by_model`` prices each step by the controller's own modeled
+    per-token pipeline delay instead of the flat ``step_dt``: the most
+    recent interval's ``d_pipe_est`` (falling back to ``step_dt`` until
+    the first interval fires, or while the estimate is non-finite).  The
+    reported percentiles then reflect the placement the controller chose
+    — a device slowdown or evacuation shows up in the latency tail
+    instead of being flattened by the uniform step price.  Off by
+    default: the flat pricing (and its committed baselines) stays
+    bit-identical.
+
+    ``events`` is a sequence of ``(t, fn)`` pairs: at the first loop
+    iteration where virtual time has reached ``t``, ``fn(eng)`` runs —
+    the churn injection hook (kill/slow/rejoin a device mid-decode).
+    Events fire in time order, before arrivals are submitted.
+
+    Deterministic: same engine seed + same workload (and same events) =>
+    identical streams AND identical latency percentiles,
+    machine-independent."""
     clock = VirtualClock()
     pending = collections.deque(sorted(reqs, key=lambda r: r.t_arrival))
+    due = collections.deque(
+        sorted(events or (), key=lambda e: e[0]))
     arrival: Dict[int, float] = {}
     first: Dict[int, float] = {}
     last: Dict[int, float] = {}
@@ -232,18 +252,37 @@ def drive_virtual(eng, reqs: Sequence[TimedRequest], *,
             first[req.rid] = now
         last[req.rid] = now
 
+    def _step_price() -> float:
+        if not price_by_model:
+            return step_dt
+        log = getattr(eng, "migration_log", None)
+        if log:
+            d = log[-1].get("d_pipe_est")
+            if d is not None and np.isfinite(d) and d > 0:
+                return float(d)
+        return step_dt
+
     eng.token_sink = sink
     try:
         while True:
+            while due and due[0][0] <= clock.now():
+                due.popleft()[1](eng)
             while pending and pending[0].t_arrival <= clock.now():
                 tr = pending.popleft()
                 rid = eng.submit(tr.prompt,
                                  max_new_tokens=tr.max_new_tokens)
                 arrival[rid] = tr.t_arrival
             if eng.step():
-                clock.advance(step_dt)
-            elif pending:
-                clock.advance_to(pending[0].t_arrival)
+                clock.advance(_step_price())
+            elif pending or due:
+                # idle: jump to whichever comes first, the next arrival
+                # or the next churn event (events must fire even in gaps)
+                nxt = []
+                if pending:
+                    nxt.append(pending[0].t_arrival)
+                if due:
+                    nxt.append(due[0][0])
+                clock.advance_to(min(nxt))
             elif eng.queue:
                 raise RuntimeError(
                     "engine idle with a queued head-of-line request it "

@@ -112,6 +112,90 @@ def test_placement_to_perm_is_permutation(seed, n_heads, n_slots):
     assert migration_pairs(perm, perm, heads_per_slot) == []
 
 
+# ----------------------------------------------------------- device churn
+@given(seed=st.integers(0, 10_000),
+       ops=st.lists(st.tuples(st.sampled_from(["fail", "rejoin", "slow",
+                                               "join", "step"]),
+                              st.integers(0, 10_000)),
+                    min_size=1, max_size=12))
+@settings(**SETTINGS)
+def test_churn_sequences_keep_network_consistent(seed, ops):
+    """Any interleaving of fail/rejoin/slow/join/background-step leaves
+    the DeviceNetwork internally consistent: array shapes track the
+    device count, inactive devices expose zero compute and zero usable
+    memory, the link matrix stays square with an inf diagonal."""
+    net = DeviceNetwork.sample(3, seed=seed)
+    rng = np.random.default_rng(seed)
+    for op, arg in ops:
+        j = arg % net.n_devices
+        if op == "fail" and net.n_active > 1 and net.is_active(j):
+            net.fail(j)
+        elif op == "rejoin" and not net.is_active(j):
+            net.rejoin(j)
+        elif op == "slow":
+            net.slow(j, 1.0 + (arg % 50))
+        elif op == "join":
+            net.join(1e9 * (1 + arg % 4), 1e9,
+                     np.full(net.n_devices, 1e8))
+        elif op == "step":
+            net.step_background_load()
+        n = net.n_devices
+        assert net.mem_capacity.shape == net.compute_max.shape \
+            == net.compute_avail.shape == net.active.shape == (n,)
+        assert net.bandwidth.shape == (n, n)
+        assert np.all(np.isinf(np.diag(net.bandwidth)))
+        assert np.all(net.compute_avail[~net.active] == 0.0)
+        assert np.all(net.mem_usable()[~net.active] == 0.0)
+        assert np.all(net.compute_avail <= net.compute_max + 1e-9)
+        assert net.n_active == len(net.active_ids)
+    del rng
+
+
+@given(seed=st.integers(0, 2_000), kill=st.integers(0, 4),
+       n_dev=st.integers(3, 5))
+@settings(max_examples=15, deadline=None)
+def test_assigner_never_places_on_inactive_device(seed, kill, n_dev):
+    """After any failure the assigner's placements only target live
+    devices — exclusion is enforced structurally, not priced."""
+    blocks = make_blocks(4)
+    cost = CostModel(d_model=512, n_heads=4, n_layers=8,
+                     compute_mode="incremental")
+    net = DeviceNetwork.sample(n_dev, seed=seed)
+    net.fail(kill % n_dev)
+    assigner = ResourceAwareAssigner(blocks, cost, deadline=1.0)
+    place, _ = assigner.assign(net, 1, None)
+    if place is not None:
+        assert not np.any(place == kill % n_dev)
+        assert np.all(net.active[place])
+
+
+@given(seed=st.integers(0, 10_000), slot=st.integers(0, 3),
+       factor=st.floats(1.0, 20.0))
+@settings(**SETTINGS)
+def test_monitor_availability_monotone_and_dead_zero(seed, slot, factor):
+    """C_j(τ) from step-time telemetry: scaling one slot's observed step
+    times up can only lower its availability estimate, and a dead slot
+    estimates to exactly zero."""
+    from repro.runtime.fault_tolerance import HeartbeatMonitor
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(0.5, 2.0, size=4)
+
+    def estimate(scale):
+        mon = HeartbeatMonitor(4)
+        for j in range(4):
+            s = scale if j == slot else 1.0
+            for _ in range(3):
+                mon.record_step(j, float(base[j]) * s)
+        return mon.availability(100.0)
+
+    a1, a2 = estimate(1.0), estimate(factor)
+    assert a2[slot] <= a1[slot] + 1e-9
+    assert np.all(a1 >= 0) and np.all(a1 <= 100.0 + 1e-9)
+    mon = HeartbeatMonitor(4)
+    mon.mark_failed(slot)
+    assert mon.availability(100.0)[slot] == 0.0
+
+
 # ------------------------------------------------------------ HLO parsing
 @given(dt=st.sampled_from(["bf16", "f32", "s32", "pred"]),
        dims=st.lists(st.integers(1, 64), min_size=0, max_size=4))
